@@ -1,0 +1,86 @@
+"""Beyond-paper accuracy study: every derived activation vs its exact form.
+
+The paper builds a tanh unit; a real accelerator routes sigmoid / SiLU /
+GELU-tanh / softplus through the same unit via identities (DESIGN.md §3).
+This bench quantifies the end-to-end error of each derived function for
+the float-CR and bit-accurate (cr_fixed) backends across LUT depths, plus
+the paper-baseline comparisons — the numbers EXPERIMENTS.md cites when it
+claims the spline engine is accurate enough to train LLM-family models.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.activations import ActivationConfig, ActivationEngine
+from repro.core.error_analysis import generic_error
+
+EXACT = {
+    "tanh": np.tanh,
+    "sigmoid": lambda x: 1.0 / (1.0 + np.exp(-x)),
+    "silu": lambda x: x / (1.0 + np.exp(-x)),
+    "gelu_tanh": lambda x: 0.5 * x * (1.0 + np.tanh(
+        np.sqrt(2.0 / np.pi) * (x + 0.044715 * x ** 3))),
+    "softplus": lambda x: np.log1p(np.exp(-np.abs(x))) + np.maximum(x, 0.0),
+}
+RANGES = {  # evaluation range per function (sigmoid/silu need 2x: x/2 wire)
+    "tanh": (-6.0, 6.0),
+    "sigmoid": (-8.0, 8.0),
+    "silu": (-8.0, 8.0),
+    "gelu_tanh": (-6.0, 6.0),
+    "softplus": (-8.0, 8.0),
+}
+
+
+def run(verbose: bool = True) -> dict:
+    # (impl, depth, x_max): paper-faithful tables (x_max=4, the Q2.13
+    # range) + the beyond-paper wide table (x_max=6, same 0.125 period)
+    # that kills the saturation-tail error 1-tanh(4) ~= 6.7e-4 — on TPU
+    # the range is not tied to a 16-bit input format, so widening is free
+    # (48 more f32 table entries).
+    variants = [(impl, depth, 4.0) for impl in ("cr", "cr_fixed", "pwl")
+                for depth in (16, 32, 64)]
+    variants += [("cr", 48, 6.0), ("cr", 96, 6.0)]
+    rows = []
+    for impl, depth, x_max in variants:
+        eng = ActivationEngine(ActivationConfig(impl=impl, depth=depth,
+                                                x_max=x_max))
+        for fn_name, exact in EXACT.items():
+            lo, hi = RANGES[fn_name]
+            err = generic_error(lambda v: eng(fn_name, v), exact, lo, hi)
+            rows.append(dict(impl=impl, depth=depth, x_max=x_max, fn=fn_name,
+                             rms=err.rms, max=err.max))
+    checks = []
+    for r in rows:
+        # paper-faithful cr-32: below bf16 compute noise (eps@1 ~ 7.8e-3);
+        # the residual is the x_max=4 saturation tail, by design.
+        if (r["impl"], r["depth"]) == ("cr", 32) and r["max"] > 2.5e-3:
+            checks.append(f"cr-32 {r['fn']} max err {r['max']:.2e} > 2.5e-3")
+        # beyond-paper wide table: tail gone, everything under 2e-4.
+        if (r["impl"], r["depth"]) == ("cr", 48) and r["max"] > 2e-4:
+            checks.append(f"cr-48/x6 {r['fn']} max err {r['max']:.2e} > 2e-4")
+
+    if verbose:
+        print("\n== Derived-activation accuracy (vs exact, dense grid) ==")
+        print(f"{'impl':>9} {'depth':>5} {'xmax':>4} | " + " | ".join(
+            f"{f:>20}" for f in EXACT))
+        for impl, depth, x_max in variants:
+            sel = {r["fn"]: r for r in rows
+                   if (r["impl"], r["depth"], r["x_max"]) ==
+                      (impl, depth, x_max)}
+            cells = " | ".join(
+                f"{sel[f]['rms']:.2e}/{sel[f]['max']:.2e}" for f in EXACT)
+            print(f"{impl:>9} {depth:5d} {x_max:4.1f} | {cells}")
+        print("          (cells: rms/max)")
+        status = "PASS" if not checks else "FAIL"
+        for c in checks:
+            print("  CHECK FAILED:", c)
+        print(f"activations: {status}")
+    return {"rows": rows, "checks": checks,
+            "status": "PASS" if not checks else "FAIL"}
+
+
+if __name__ == "__main__":
+    run()

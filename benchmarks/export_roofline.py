@@ -1,0 +1,62 @@
+"""Export the final roofline table (both meshes) to
+experiments/roofline_final.md — the artifact EXPERIMENTS.md §Roofline
+points at. Run after a full dry-run sweep."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from . import roofline_table as rt
+
+OUT = Path(__file__).resolve().parent.parent / "experiments" / "roofline_final.md"
+
+
+def md_table(mesh: str) -> str:
+    rows = rt.load(mesh)
+    lines = [
+        f"### {mesh} mesh "
+        f"({'16x16 = 256 chips' if mesh == 'single' else '2x16x16 = 512 chips'})",
+        "",
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+        "| useful | mfu_bound | GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip (full-attn @512k) | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        roof, mem = r["roofline"], r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {roof['compute_s']:.4f} | "
+            f"{roof['memory_s']:.4f} | {roof['collective_s']:.4f} | "
+            f"{roof['bottleneck']} | {roof['useful_ratio']:.2f} | "
+            f"{roof['mfu_bound']:.4f} | "
+            f"{mem['peak_estimate_bytes']/2**30:.1f} |")
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    sk = sum(1 for r in rows if r["status"] == "skipped")
+    lines += ["", f"{ok} compiled, {sk} documented skips, "
+                  f"{len(rows) - ok - sk} errors.", ""]
+    return "\n".join(lines)
+
+
+def main():
+    parts = [
+        "# Final roofline table (est-v3 measurement, final model code)",
+        "",
+        "Terms are per-device seconds on TPU v5e constants "
+        "(197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI link). "
+        "`useful` = MODEL_FLOPS/dev / HLO_FLOPs/dev; `mfu_bound` = "
+        "roofline-implied ceiling on MFU given the dominant term.",
+        "",
+        md_table("single"),
+        md_table("multi"),
+    ]
+    OUT.write_text("\n".join(parts))
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Pallas-kernel micro-benchmarks (CPU interpret mode = correctness +
+rough cost structure; the roofline numbers for TPU come from the dry-run).
+
+For each kernel: wall-time vs the pure-jnp oracle at a few shapes, plus
+the analytic VMEM working-set check for the chosen BlockSpecs. Interpret
+mode is orders of magnitude slower than compiled TPU — the timing column
+is for relative comparisons between lookup strategies only.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.activations import tanh_table
+from repro.kernels import ops, ref
+from repro.kernels import cr_act as cr_act_mod
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def vmem_working_set(block_rows: int, block_cols: int, depth: int) -> int:
+    """Bytes resident per cr_act block: x block + y block + windows table
+    + onehot intermediate (rows*cols one-hot of depth -> f32)."""
+    blk = block_rows * block_cols * 4
+    table = depth * 4 * 4
+    onehot = block_rows * block_cols * 4  # folded into the dot operand
+    return 2 * blk + table + onehot
+
+
+def run(verbose: bool = True) -> dict:
+    table = tanh_table(4.0, 32)
+    rows = []
+    key = jax.random.key(0)
+    for shape in ((256, 512), (1024, 1024)):
+        x = jax.random.normal(key, shape, jnp.float32) * 2.0
+        t_ref = _time(jax.jit(lambda v: ref.cr_act_ref(v, table)), x)
+        for lookup in ("onehot", "take"):
+            t_k = _time(lambda v, lk=lookup: ops.cr_act(v, lookup=lk), x)
+            err = float(jnp.max(jnp.abs(
+                ops.cr_act(x, lookup=lookup) - ref.cr_act_ref(x, table))))
+            rows.append(dict(kernel="cr_act", lookup=lookup, shape=shape,
+                             t_kernel_ms=t_k * 1e3, t_ref_ms=t_ref * 1e3,
+                             max_abs_err=err))
+    # fused GLU
+    for (m, d, f) in ((128, 256, 512),):
+        xs = jax.random.normal(key, (m, d), jnp.float32)
+        wg = jax.random.normal(key, (d, f), jnp.float32) / np.sqrt(d)
+        wu = jax.random.normal(key, (d, f), jnp.float32) / np.sqrt(d)
+        t_ref = _time(jax.jit(
+            lambda a, b, c: ref.fused_glu_ref(a, b, c, table)), xs, wg, wu)
+        t_k = _time(lambda a, b, c: ops.fused_glu(a, b, c), xs, wg, wu)
+        err = float(jnp.max(jnp.abs(
+            ops.fused_glu(xs, wg, wu) - ref.fused_glu_ref(xs, wg, wu, table))))
+        rows.append(dict(kernel="fused_glu", lookup="-", shape=(m, d, f),
+                         t_kernel_ms=t_k * 1e3, t_ref_ms=t_ref * 1e3,
+                         max_abs_err=err))
+
+    ws = vmem_working_set(cr_act_mod.DEFAULT_BLOCK_ROWS,
+                          cr_act_mod.DEFAULT_BLOCK_COLS, 32)
+    checks = []
+    if ws > 16 * 2 ** 20:
+        checks.append(f"cr_act default block working set {ws} > 16 MiB VMEM")
+    for r in rows:
+        tol = 1e-5 if r["kernel"] == "cr_act" else 5e-4  # f32 matmul assoc
+        if r["max_abs_err"] > tol:
+            checks.append(f"{r['kernel']}/{r['lookup']} {r['shape']} err "
+                          f"{r['max_abs_err']:.2e} > {tol}")
+
+    if verbose:
+        print("\n== Pallas kernels (interpret mode; timings are relative) ==")
+        for r in rows:
+            print(f"{r['kernel']:>10}/{r['lookup']:<7} {str(r['shape']):<18}"
+                  f" kernel {r['t_kernel_ms']:9.1f} ms | jnp-ref "
+                  f"{r['t_ref_ms']:7.1f} ms | max|err| {r['max_abs_err']:.2e}")
+        print(f"cr_act default block VMEM working set: {ws/2**10:.0f} KiB "
+              f"(16 MiB/core budget)")
+        status = "PASS" if not checks else "FAIL"
+        for c in checks:
+            print("  CHECK FAILED:", c)
+        print(f"kernel_bench: {status}")
+    return {"rows": rows, "checks": checks,
+            "status": "PASS" if not checks else "FAIL"}
+
+
+if __name__ == "__main__":
+    run()

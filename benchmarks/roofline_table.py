@@ -1,0 +1,73 @@
+"""Roofline summary table from the dry-run artifacts (§Roofline source).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+renders the per-(arch x shape x mesh) three-term roofline table:
+compute / memory / collective seconds, dominant bottleneck, useful-FLOPs
+ratio, and the roofline-bound MFU. The single-pod mesh is the table the
+assignment grades; multi-pod rows prove the pod axis shards.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+ARCH_ORDER = ["yi-34b", "olmo-1b", "qwen3-0.6b", "qwen2.5-3b", "hymba-1.5b",
+              "mixtral-8x22b", "llama4-scout-17b-a16e", "qwen2-vl-2b",
+              "falcon-mamba-7b", "musicgen-large"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "single", tag: str = "") -> list[dict]:
+    rows = []
+    suffix = f"__{tag}" if tag else ""
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            p = RESULTS_DIR / f"{arch}__{shape}__{mesh}{suffix}.json"
+            if p.exists():
+                rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] == "skipped":
+        return (f"{r['arch']:>22} {r['shape']:<12} {'skip':>9} "
+                f"(full-attention arch at 512k ctx)")
+    if r["status"] != "ok":
+        return f"{r['arch']:>22} {r['shape']:<12} {'ERROR':>9} {r.get('error','')[:60]}"
+    roof = r["roofline"]
+    mem = r["memory"]["peak_estimate_bytes"] / 2 ** 30
+    return (f"{r['arch']:>22} {r['shape']:<12} "
+            f"{roof['compute_s']:9.4f} {roof['memory_s']:9.4f} "
+            f"{roof['collective_s']:9.4f}  {roof['bottleneck']:<10} "
+            f"{roof['useful_ratio']:6.2f} {roof['mfu_bound']:8.4f} "
+            f"{mem:8.2f}")
+
+
+def run(verbose: bool = True, mesh: str = "single") -> dict:
+    rows = load(mesh)
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    errors = [r for r in rows if r["status"] not in ("ok", "skipped")]
+    if verbose:
+        print(f"\n== Roofline table ({mesh} mesh: "
+              f"{'16x16=256' if mesh == 'single' else '2x16x16=512'} chips, "
+              f"TPU v5e terms) ==")
+        print(f"{'arch':>22} {'shape':<12} {'compute_s':>9} {'memory_s':>9} "
+              f"{'collect_s':>9}  {'bottleneck':<10} {'useful':>6} "
+              f"{'mfu_bnd':>8} {'GiB/dev':>8}")
+        for r in rows:
+            print(fmt_row(r))
+        print(f"{len(ok)} ok / {len(skipped)} skipped / {len(errors)} errors "
+              f"of {len(rows)} recorded cells")
+    status = "PASS" if (ok and not errors) else "FAIL"
+    if verbose:
+        print(f"roofline_table[{mesh}]: {status}")
+    return {"rows": rows, "status": status,
+            "n_ok": len(ok), "n_skipped": len(skipped), "n_err": len(errors)}
+
+
+if __name__ == "__main__":
+    run(mesh="single")
+    run(mesh="multi")

@@ -1,0 +1,63 @@
+"""Benchmark harness entry point: one module per paper table/figure plus
+the framework-level benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table1_2   # one bench
+
+Benches:
+    table1_2        paper Tables I & II (PWL vs CR error, 4 depths)
+    table3          paper Table III (area via gate model + accuracy)
+    activations     derived-activation accuracy (beyond-paper)
+    kernel_bench    Pallas kernel vs oracle timings + VMEM budget
+    roofline_table  §Roofline summary from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import activations, kernel_bench, roofline_table, table1_2, table3
+
+
+def _roofline_both():
+    single = roofline_table.run(mesh="single")
+    multi = roofline_table.run(mesh="multi")
+    ok = single["status"] == "PASS" and multi["status"] == "PASS"
+    return {"single": single, "multi": multi,
+            "status": "PASS" if ok else "FAIL"}
+
+
+BENCHES = {
+    "table1_2": lambda: table1_2.run(),
+    "table3": lambda: table3.run(),
+    "activations": lambda: activations.run(),
+    "kernel_bench": lambda: kernel_bench.run(),
+    "roofline_table": _roofline_both,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    results = {}
+    t_start = time.time()
+    for name in names:
+        if name not in BENCHES:
+            raise SystemExit(f"unknown bench {name!r}; have {list(BENCHES)}")
+        t0 = time.time()
+        results[name] = BENCHES[name]()
+        results[name]["wall_s"] = time.time() - t0
+    print("\n== benchmark summary ==")
+    failed = []
+    for name in names:
+        st = results[name].get("status", "?")
+        print(f"{name:<16} {st:<5} ({results[name]['wall_s']:.1f}s)")
+        if st != "PASS":
+            failed.append(name)
+    print(f"total {time.time() - t_start:.1f}s")
+    if failed:
+        raise SystemExit(f"FAILED: {failed}")
+    print("ALL BENCHES PASS")
+
+
+if __name__ == "__main__":
+    main()

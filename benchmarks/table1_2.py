@@ -1,0 +1,60 @@
+"""Paper Tables I & II: RMS / max error, PWL vs Catmull-Rom, 4 LUT depths.
+
+Reproduces the paper's error analysis over the full 16-bit Q2.13 input
+lattice on (-4, 4) and checks our numbers against the published tables.
+Tolerance: the paper reports 6 decimal digits computed on the same
+quantized datapath (see core/error_analysis.py for the datapath
+reconstruction); we assert agreement within 5% relative or one output
+LSB (2^-13), whichever is looser — reporting-precision differences, not
+method differences.
+"""
+from __future__ import annotations
+
+from repro.core.error_analysis import PAPER_TABLE_1_2, table_1_2
+
+LSB = 2.0 ** -13
+
+
+def check_row(row: dict) -> list[str]:
+    """Compare one regenerated row to the paper; return mismatch strings."""
+    bad = []
+    ref = row["paper"]
+    for key, ours in (("pwl_rms", row["pwl_rms"]), ("cr_rms", row["cr_rms"]),
+                      ("pwl_max", row["pwl_max"]), ("cr_max", row["cr_max"])):
+        want = ref[key]
+        tol = max(0.05 * want, LSB)
+        if abs(ours - want) > tol:
+            bad.append(f"depth={row['depth']} {key}: ours={ours:.6f} "
+                       f"paper={want:.6f} (tol {tol:.6f})")
+    return bad
+
+
+def run(verbose: bool = True) -> dict:
+    rows = table_1_2(datapath="qout")
+    mismatches = []
+    if verbose:
+        print("\n== Paper Table I (RMS error) and II (max error), "
+              "Q2.13 end-to-end ==")
+        print(f"{'period':>7} {'depth':>5} | {'PWL rms':>9} {'CR rms':>9} "
+              f"{'gain':>6} (paper {'':>5}) | {'PWL max':>9} {'CR max':>9} "
+              f"{'gain':>6}")
+    for row in rows:
+        mismatches += check_row(row)
+        if verbose:
+            ref = row["paper"]
+            print(f"{row['period']:7.4f} {row['depth']:5d} | "
+                  f"{row['pwl_rms']:9.6f} {row['cr_rms']:9.6f} "
+                  f"{row['rms_gain']:6.2f} "
+                  f"(paper {ref['pwl_rms'] / ref['cr_rms']:6.2f}) | "
+                  f"{row['pwl_max']:9.6f} {row['cr_max']:9.6f} "
+                  f"{row['max_gain']:6.2f}")
+    status = "PASS" if not mismatches else "FAIL"
+    if verbose:
+        for m in mismatches:
+            print("  MISMATCH:", m)
+        print(f"table1_2: {status} ({len(rows)} rows vs paper)")
+    return {"rows": rows, "mismatches": mismatches, "status": status}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,99 @@
+"""Paper Table III: area (gate count) and accuracy comparison.
+
+Accuracy is *measured* here (our implementations of each method over the
+Q2.13 grid); gate counts come from the analytic NAND2-equivalent model in
+core/gatecount.py for the datapaths we built, and verbatim published
+numbers for external works — exactly how the paper itself treats [10].
+
+The headline claims this reproduces:
+  * CR max error 0.000152 at 13-bit precision, no memory macro;
+  * the CR datapath gate count lands in the published 5840-gate ballpark
+    (we assert within 2x — an analytic model vs real synthesis);
+  * CR is either more accurate than [5]/[6] (100x) at moderate area, or
+    memory-free vs [10] at similar accuracy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import gatecount as gc
+from repro.core.activations import ActivationConfig, ActivationEngine
+from repro.core.error_analysis import tanh_error, generic_error
+
+PAPER_CR_GATES = 5840
+PAPER_CR_MAX_ERR = 0.000152
+
+
+def measured_rows() -> list[dict]:
+    rows = []
+
+    # our CR datapaths (the paper's contribution, both t-vector options)
+    for t_in_lut in (False, True):
+        rep = gc.cr_spline_datapath(frac_bits=13, depth=32, t_in_lut=t_in_lut)
+        err = tanh_error("cr", 32, datapath="fixed")
+        rows.append(dict(work=f"this: {rep.name}", precision=13,
+                         gates=rep.gates, memory_kbits=rep.memory_kbits,
+                         max_err=err.max, rms_err=err.rms, measured=True))
+
+    # PWL at same depth (the in-paper baseline)
+    rep = gc.pwl_datapath(frac_bits=13, depth=32)
+    err = tanh_error("pwl", 32, datapath="qout")
+    rows.append(dict(work=f"this: {rep.name}", precision=13, gates=rep.gates,
+                     memory_kbits=rep.memory_kbits, max_err=err.max,
+                     rms_err=err.rms, measured=True))
+
+    # reimplemented comparison methods (accuracy measured, area n/a)
+    for impl, label in (("region", "region [6]-style"),
+                        ("taylor", "taylor [8]-style"),
+                        ("base2", "base2 [9]-style")):
+        eng = ActivationEngine(ActivationConfig(impl=impl))
+        err = generic_error(eng.tanh, np.tanh, -4.0, 4.0)
+        rows.append(dict(work=f"this: {label}", precision=None, gates=None,
+                         memory_kbits=None, max_err=err.max, rms_err=err.rms,
+                         measured=True))
+    return rows
+
+
+def run(verbose: bool = True) -> dict:
+    rows = measured_rows()
+    published = [dict(r, measured=False) for r in gc.PUBLISHED]
+    all_rows = published + rows
+
+    cr_row = rows[0]
+    checks = []
+    # (1) accuracy reproduces the paper's headline
+    if abs(cr_row["max_err"] - PAPER_CR_MAX_ERR) > 2 ** -13:
+        checks.append(
+            f"CR max err {cr_row['max_err']:.6f} != paper {PAPER_CR_MAX_ERR}")
+    # (2) analytic area lands in the synthesis ballpark (within 2x)
+    ratio = cr_row["gates"] / PAPER_CR_GATES
+    if not (0.5 <= ratio <= 2.0):
+        checks.append(f"CR gate model {cr_row['gates']:.0f} vs paper "
+                      f"{PAPER_CR_GATES} (ratio {ratio:.2f})")
+    # (3) the paper's comparison claim: ~100x more accurate than [5]/[6]
+    for pub in published[:2]:
+        if not cr_row["max_err"] * 50 < pub["max_err"]:
+            checks.append(f"accuracy vs {pub['work']} not >=50x")
+
+    if verbose:
+        print("\n== Paper Table III: area and accuracy ==")
+        print(f"{'work':<38} {'prec':>4} {'gates':>7} {'mem kb':>8} "
+              f"{'max err':>9} {'rms':>9}")
+        for r in all_rows:
+            g = f"{r['gates']:.0f}" if r.get("gates") else "-"
+            m = f"{r['memory_kbits']:.1f}" if r.get("memory_kbits") is not None else "-"
+            p = str(r["precision"]) if r.get("precision") else "-"
+            rms = f"{r['rms_err']:.6f}" if "rms_err" in r and r["rms_err"] is not None else "-"
+            tag = "" if r["measured"] else "  (published)"
+            print(f"{r['work']:<38} {p:>4} {g:>7} {m:>8} "
+                  f"{r['max_err']:9.6f} {rms:>9}{tag}")
+        status = "PASS" if not checks else "FAIL"
+        for c in checks:
+            print("  CHECK FAILED:", c)
+        print(f"table3: {status}")
+    return {"rows": all_rows, "checks": checks,
+            "status": "PASS" if not checks else "FAIL"}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Batched serving scenario: prefill + decode with the CR activation unit.
+
+    PYTHONPATH=src python examples/serve_spline_lm.py --batch 4 --gen 24
+
+Serves a small qwen3-family model (CR-spline SwiGLU) over a batch of
+synthetic prompts through the SAME prefill/serve step functions the
+512-chip dry-run lowers, then reports per-phase token throughput and
+verifies two serving invariants on-line:
+
+  * prefix consistency: decoding greedily from the prefilled cache gives
+    the same first token as a full no-cache forward pass;
+  * activation-engine equivalence: serving with the bit-accurate Q2.13
+    engine (cr_fixed) tracks the float CR engine's outputs (the two
+    datapaths agree to ~1 output LSB, so greedy tokens rarely diverge —
+    we report the agreement rate over the generated stream).
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core.activations import ActivationConfig, ActivationEngine
+from repro.data import DataConfig, SyntheticPipeline
+from repro.launch import steps as steps_mod
+from repro.launch.serve import serve_batch
+from repro.models import model as M
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=48)
+    p.add_argument("--gen", type=int, default=24)
+    args = p.parse_args()
+
+    cfg = registry.get("qwen3-0.6b", smoke=True)           # cr-d32 engine
+    params, _ = M.materialize_params(cfg, seed=0)
+    pipe = SyntheticPipeline(cfg, DataConfig(seed=4, vocab_size=cfg.vocab_size),
+                             args.batch, args.prompt_len)
+    prompts = pipe(0)["tokens"]
+
+    # -- serve with the float CR engine ---------------------------------
+    toks_cr, stats = serve_batch(cfg, params, prompts, args.gen)
+    print(f"[serve] CR engine: prefill {stats.prefill_tokens_per_s:,.0f} "
+          f"tok/s, decode {stats.decode_tokens_per_s:,.1f} tok/s")
+
+    # -- invariant 1: prefill+decode == full forward ---------------------
+    engine = ActivationEngine(cfg.activation)
+    full_logits = M.forward_fn(params, {"tokens": prompts}, cfg, engine)
+    t_full = jnp.argmax(full_logits[:, -1], axis=-1)
+    assert np.array_equal(np.asarray(t_full), np.asarray(toks_cr[:, 0])), \
+        "first decoded token != full-forward argmax"
+    print("[serve] prefix consistency: cache path == full forward  OK")
+
+    # -- invariant 2: fixed-point engine tracks float engine -------------
+    cfg_fx = dataclasses.replace(
+        cfg, activation=ActivationConfig(impl="cr_fixed", depth=32))
+    toks_fx, _ = serve_batch(cfg_fx, params, prompts, args.gen)
+    agree = float(np.mean(np.asarray(toks_cr) == np.asarray(toks_fx)))
+    print(f"[serve] greedy-token agreement CR vs Q2.13 fixed: {agree:.1%}")
+    assert agree > 0.85, "fixed-point engine diverged from float CR"
+    print("[serve] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,463 @@
+"""HLO cost analysis with while-loop trip-count multiplication.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts the body of a
+``while`` loop ONCE, regardless of trip count (verified empirically:
+a 4-iteration ``lax.scan`` of a 1024^3 matmul reports 2.1 GFLOP, the
+4x-unrolled equivalent 8.6 GFLOP). Every model in this framework scans
+over layers — 16..64 iterations — and flash attention scans over KV/Q
+chunks, so the built-in numbers under-report FLOPs/bytes/collective
+traffic by 1-2 orders of magnitude. The roofline would be fiction.
+
+This module re-derives the three roofline inputs from the compiled
+(post-SPMD, post-optimization) HLO text:
+
+  * computations are parsed into instruction lists with shapes,
+  * the call graph is walked from ENTRY with a multiplier that picks up
+    ``backend_config={"known_trip_count":{"n":k}}`` on while ops
+    (scan always produces a known trip count; unknown-trip whiles fall
+    back to 1 and are reported),
+  * FLOPs: dot ops contribute 2 * numel(output) * contracted-size
+    (batch/free dims read off the operand shapes); elementwise /
+    reduce ops contribute numel (minor next to the dots);
+  * bytes: per top-level instruction, operand + output buffer sizes
+    (fusion interiors excluded — fused intermediates never touch HBM);
+    free ops (tuple plumbing, bitcast, parameter, ...) excluded;
+  * collective bytes: result-shape bytes by op kind, times the loop
+    multiplier — the per-layer TP collectives inside a scanned stack
+    finally count n_layers times.
+
+Calibration: on while-free modules this agrees with cost_analysis()
+to within a few percent on flops (see tests/test_hlo_cost.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Iterator
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# ops that move no data / cost nothing at runtime
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "token", "partition-id", "replica-id", "iota",
+    "rng-get-and-update-state", "custom-call",  # custom-call: handled case-by-case
+}
+
+# shape like  f32[8,128]{1,0}  or  (f32[2]{0}, s32[])  (tuples flattened)
+_SHAPE_ATOM = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+# instruction:  %name = <shape> opcode(...operands...), attrs
+# tuple shapes may contain /*index=N*/ comments (hence .*? not [^=]*?)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*(\(.*?\)|\S+?)\s+([\w-]+)\(")
+
+# computation header:  %comp_name (param: (nested, tuple)) -> ret {
+# params may contain nested parens, so match greedily to the arrow.
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s*\(.*->.*\{\s*$")
+
+_OPERAND_RE = re.compile(r"%([\w.-]+)")
+_ATTR_COMP_RE = re.compile(
+    r"(body|condition|calls|to_apply|branch_computations)="
+    r"(\{[^}]*\}|%?[\w.-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_ATOM.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_numel(shape_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_ATOM.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str            # result shape string (may be tuple)
+    opcode: str
+    line: str             # full text line (attrs live here)
+
+    @property
+    def is_root(self) -> bool:
+        return self.line.lstrip().startswith("ROOT ")
+
+    @property
+    def param_index(self) -> int | None:
+        if self.opcode != "parameter":
+            return None
+        m = re.search(r"parameter\((\d+)\)", self.line)
+        return int(m.group(1)) if m else None
+
+    def operands(self, names: set) -> list[str]:
+        """Operand names: %refs inside the opcode's argument parens only
+        (NOT the whole line — that would match the instruction's own name
+        on the lhs and computation refs in the attrs)."""
+        start = self.line.find(self.opcode + "(")
+        if start < 0:
+            return []
+        start += len(self.opcode) + 1
+        end = self.line.find(")", start)
+        span = self.line[start:end if end >= 0 else None]
+        return [n for n in _OPERAND_RE.findall(span) if n in names]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: dict          # name -> Instr
+
+    @property
+    def names(self) -> set:
+        return set(self.instrs)
+
+
+def parse_module(hlo_text: str) -> dict[str, Computation]:
+    """Split the HLO text into computations. Entry computation is stored
+    under its own name AND the key '__entry__'."""
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = Computation(m.group(1), {})
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry_name = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            name, shape, opcode = mi.group(1), mi.group(2), mi.group(3)
+            cur.instrs[name] = Instr(name, shape, opcode, line)
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    """2 * numel(out) * contracted_size for a dot op."""
+    out_numel = _shape_numel(instr.shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+    if not m:
+        return 2.0 * out_numel  # degenerate
+    cdims = [int(d) for d in m.group(1).split(",") if d]
+    ops = instr.operands(comp.names)
+    if not ops:
+        return 2.0 * out_numel
+    lhs = comp.instrs.get(ops[0])
+    if lhs is None:
+        return 2.0 * out_numel
+    dims_m = _SHAPE_ATOM.search(lhs.shape)
+    if not dims_m:
+        return 2.0 * out_numel
+    lhs_dims = [int(d) for d in dims_m.group(2).split(",") if d]
+    k = 1
+    for d in cdims:
+        if d < len(lhs_dims):
+            k *= lhs_dims[d]
+    return 2.0 * out_numel * k
+
+
+_ELTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "and", "or", "xor", "not", "negate", "abs", "exponential", "log",
+    "log-plus-one", "exponential-minus-one", "tanh", "sine", "cosine",
+    "sqrt", "rsqrt", "cbrt", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "sign", "compare", "select", "clamp", "convert",
+    "erf", "logistic",
+}
+
+
+def _called_comps(instr: Instr) -> list[tuple[str, str]]:
+    """(attr_kind, computation_name) pairs referenced by this op."""
+    out = []
+    for kind, ref in _ATTR_COMP_RE.findall(instr.line):
+        if ref.startswith("{"):
+            for name in _OPERAND_RE.findall(ref):
+                out.append((kind, name))
+        else:
+            out.append((kind, ref.lstrip("%")))
+    return out
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    bytes_by_kind: dict = dataclasses.field(default_factory=dict)
+    count_by_kind: dict = dataclasses.field(default_factory=dict)
+    transcendentals: float = 0.0
+    unknown_trip_whiles: int = 0
+    profile: list = dataclasses.field(default_factory=list)
+    # profile rows: (cost_bytes_or_flops, kind, mult, opcode, op_name, shape)
+
+    def add_collective(self, kind: str, nbytes: float, mult: float):
+        self.collective_bytes += nbytes * mult
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0.0) + nbytes * mult
+        self.count_by_kind[kind] = self.count_by_kind.get(kind, 0) + mult
+
+
+def _collective_kind(opcode: str) -> str | None:
+    base = opcode.removesuffix("-start").removesuffix("-done")
+    return base if base in COLLECTIVE_KINDS else None
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _op_name(line: str) -> str:
+    m = _OPNAME_RE.search(line)
+    return m.group(1) if m else ""
+
+
+_SLICE_OPS = ("dynamic-slice", "gather", "slice")
+
+
+def _fusion_bytes(instr: Instr, comp: Computation, fcomp: Computation | None
+                  ) -> float:
+    """HBM bytes for a fusion op, slice-aware.
+
+    Naive operand+output counting is catastrophically wrong for two
+    common fusion shapes inside scan loops (measured 1000x inflation on
+    the mamba selective scan):
+      * a fused ROOT dynamic-update-slice writes only the update region
+        into an aliased buffer, not the whole buffer;
+      * a fused parameter consumed ONLY by dynamic-slice/gather reads the
+        selected region per execution, not the whole (e.g. stacked
+        layer-weight or residual) buffer.
+    """
+    out_b = _shape_bytes(instr.shape)
+    ops_ = instr.operands(comp.names)
+    if fcomp is None:
+        return out_b + sum(_shape_bytes(comp.instrs[o].shape) for o in ops_
+                           if comp.instrs[o].opcode != "constant")
+    fnames = fcomp.names
+
+    # converts/bitcasts are dtype/layout plumbing: the CPU backend
+    # legalizes bf16 dus as convert->f32 dus->convert (native on TPU),
+    # which must not turn a slice-write into a full-buffer rewrite.
+    def unwrap(i: Instr) -> Instr:
+        seen_ = set()
+        while i.opcode in ("convert", "bitcast") and i.name not in seen_:
+            seen_.add(i.name)
+            ops_i = i.operands(fnames)
+            if not ops_i:
+                break
+            i = fcomp.instrs[ops_i[0]]
+        return i
+
+    def consumers_through(pname: str) -> list:
+        out, todo = [], [pname]
+        visited = set()
+        while todo:
+            n = todo.pop()
+            for i in fcomp.instrs.values():
+                if n in i.operands(fnames) and i.name not in visited:
+                    visited.add(i.name)
+                    if i.opcode in ("convert", "bitcast"):
+                        todo.append(i.name)
+                    else:
+                        out.append(i)
+        return out
+
+    # roots: the fused root, or the elements of a fused root tuple
+    # (multi-output fusion). A dus root writes only its update region.
+    root = next((i for i in fcomp.instrs.values() if i.is_root), None)
+    roots = []
+    if root is not None:
+        if root.opcode == "tuple":
+            roots = [unwrap(fcomp.instrs[o]) for o in root.operands(fnames)]
+        else:
+            roots = [unwrap(root)]
+    dus_roots = [r for r in roots if r.opcode == "dynamic-update-slice"]
+    if roots:
+        out_b = 0.0
+        for r in roots:
+            if r.opcode == "dynamic-update-slice":
+                r_ops = r.operands(fnames)
+                out_b += 2 * _shape_bytes(
+                    fcomp.instrs[r_ops[1]].shape) if len(r_ops) > 1 else 0
+            else:
+                out_b += _shape_bytes(r.shape)
+    # params consumed only via slicing read the slice, not the buffer;
+    # params that are just a dus root's aliased output buffer cost nothing
+    params = {i.param_index: i.name for i in fcomp.instrs.values()
+              if i.opcode == "parameter"}
+    dus_buffer_params = set()
+    for r in dus_roots:
+        r_ops = r.operands(fnames)
+        if r_ops:
+            buf = unwrap(fcomp.instrs[r_ops[0]])
+            if buf.opcode == "parameter":
+                dus_buffer_params.add(buf.name)
+    in_b = 0.0
+    for idx, o in enumerate(ops_):
+        src = comp.instrs[o]
+        if src.opcode == "constant":
+            continue
+        pname = params.get(idx)
+        full = _shape_bytes(src.shape)
+        if pname is None:
+            in_b += full
+            continue
+        consumers = consumers_through(pname)
+        if consumers and all(c.opcode in _SLICE_OPS for c in consumers):
+            in_b += sum(_shape_bytes(c.shape) for c in consumers)
+        elif pname in dus_buffer_params and consumers \
+                and all(c in dus_roots for c in consumers):
+            pass  # the aliased output buffer itself: counted via out_b
+        else:
+            in_b += full
+    return out_b + in_b
+
+
+def analyze_hlo(hlo_text: str, profile: bool = False,
+                profile_min_bytes: float = 1e6) -> CostTotals:
+    comps = parse_module(hlo_text)
+    totals = CostTotals()
+    if "__entry__" not in comps:
+        return totals
+
+    def walk(comp_name: str, mult: float, in_fusion: bool, seen: tuple):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen:
+            return
+        seen = seen + (comp_name,)
+        names = comp.names
+        for instr in comp.instrs.values():
+            op = instr.opcode
+            kind = _collective_kind(op)
+            if kind is not None:
+                if not op.endswith("-done"):
+                    nb = _shape_bytes(instr.shape)
+                    totals.add_collective(kind, nb, mult)
+                    if profile and nb * mult >= profile_min_bytes:
+                        totals.profile.append(
+                            (nb * mult, "collective", mult, op,
+                             _op_name(instr.line), instr.shape[:80]))
+                    # collectives also move HBM bytes
+                    if not in_fusion:
+                        totals.bytes += nb * mult
+                continue
+
+            # -- flops ------------------------------------------------
+            if op in ("dot", "dot-general"):
+                totals.flops += _dot_flops(instr, comp) * mult
+            elif op == "convolution":
+                # rough: 2 * numel(out) * (kernel numel / out channels)
+                totals.flops += 2.0 * _shape_numel(instr.shape) * mult
+            elif op in _ELTWISE:
+                totals.flops += _shape_numel(instr.shape) * mult
+                if op in ("exponential", "tanh", "log", "logistic", "erf",
+                          "power", "sine", "cosine"):
+                    totals.transcendentals += _shape_numel(instr.shape) * mult
+            elif op in ("reduce", "reduce-window"):
+                ops_ = instr.operands(names)
+                in_numel = (_shape_numel(comp.instrs[ops_[0]].shape)
+                            if ops_ else _shape_numel(instr.shape))
+                totals.flops += in_numel * mult
+
+            # -- bytes (top level only; fused interiors stay on chip) --
+            # while/call/conditional move no data themselves: carried
+            # buffers are donated/aliased in place; the body ops account
+            # for every actual touch (counting the carry tuple per trip
+            # inflated scan-heavy models by the full residual-stack size).
+            if (not in_fusion and op not in _FREE_OPS
+                    and op not in ("while", "call", "conditional")):
+                b = _shape_bytes(instr.shape)
+                if op == "fusion":
+                    calls_ = _called_comps(instr)
+                    fcomp = comps.get(calls_[0][1]) if calls_ else None
+                    b = _fusion_bytes(instr, comp, fcomp)
+                    totals.bytes += b * mult
+                    if profile and b * mult >= profile_min_bytes:
+                        totals.profile.append(
+                            (b * mult, "bytes", mult, op,
+                             _op_name(instr.line), instr.shape[:80]))
+                    for _, cname in calls_:
+                        walk(cname, mult, True, seen)
+                    continue
+                if op in ("slice", "dynamic-slice", "gather"):
+                    # reads only the selected region (= output) + indices,
+                    # NOT the whole operand (a dynamic-slice of stacked
+                    # layer weights inside a scan reads one layer's slice
+                    # per trip, not the full stack)
+                    b *= 2
+                elif op in ("dynamic-update-slice", "scatter"):
+                    # writes the update region in place (buffer aliased)
+                    ops_ = instr.operands(names)
+                    upd = (_shape_bytes(comp.instrs[ops_[1]].shape)
+                           if len(ops_) > 1 else _shape_bytes(instr.shape))
+                    b = 2 * upd
+                else:
+                    for o in instr.operands(names):
+                        src = comp.instrs[o]
+                        if src.opcode not in ("constant",):
+                            b += _shape_bytes(src.shape)
+                totals.bytes += b * mult
+                if profile and b * mult >= profile_min_bytes:
+                    totals.profile.append(
+                        (b * mult, "bytes", mult, op,
+                         _op_name(instr.line), instr.shape[:80]))
+
+            # -- recurse ------------------------------------------------
+            calls = _called_comps(instr)
+            if op == "while":
+                t = _TRIP_RE.search(instr.line)
+                trips = int(t.group(1)) if t else 1
+                if not t:
+                    totals.unknown_trip_whiles += 1
+                for kind_, cname in calls:
+                    if kind_ == "body":
+                        walk(cname, mult * trips, in_fusion, seen)
+                    elif kind_ == "condition":
+                        walk(cname, mult * (trips + 1), True, seen)
+            elif op == "fusion":
+                for _, cname in calls:
+                    walk(cname, mult, True, seen)
+            elif op in ("call", "async-start", "custom-call"):
+                for _, cname in calls:
+                    walk(cname, mult, in_fusion, seen)
+            elif op == "conditional":
+                for _, cname in calls:
+                    walk(cname, mult, in_fusion, seen)  # upper bound: all branches
+            # reduce/map to_apply bodies are per-element scalars: skip
+
+    walk("__entry__", 1.0, False, ())
+    return totals
+
+
+def analyze_compiled(compiled) -> CostTotals:
+    return analyze_hlo(compiled.as_text())

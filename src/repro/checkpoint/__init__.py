@@ -1,0 +1,1 @@
+from .store import CheckpointStore, flatten_tree, unflatten_like  # noqa: F401

@@ -1,0 +1,41 @@
+"""Shared helpers for architecture configs."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.activations import ActivationConfig
+from repro.models.config import ModelConfig
+
+# Framework default: the paper's flagship CR-spline engine (depth 32).
+# Override with activation=ActivationConfig(impl="exact") to reproduce the
+# float-exact baseline the papers' host models assume.
+CR_ACT = ActivationConfig(impl="cr", depth=32, x_max=4.0)
+
+
+def smoke_of(cfg: ModelConfig, **extra) -> ModelConfig:
+    """Reduced same-family config: tiny dims, few layers, small vocab."""
+    base = dict(
+        n_layers=2,
+        d_model=64,
+        n_heads=4 if cfg.n_heads else 0,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_heads else 0,
+        head_dim=16 if cfg.n_heads else 0,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=512,
+        vocab_pad_multiple=64,
+        n_experts=4 if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2),
+        # smoke: exact dropless dispatch (gshard's capacity drops are
+        # severe under random routers at toy S; equivalence of the two
+        # paths is asserted separately in tests/test_models.py)
+        moe_impl="ragged" if cfg.n_experts else cfg.moe_impl,
+        d_inner=128 if (cfg.use_mamba or cfg.parallel_mamba) else 0,
+        ssm_state=8,
+        dt_rank=8,
+        sliding_window=32 if cfg.sliding_window else None,
+        q_chunk=16,
+        kv_chunk=16,
+        name=cfg.name + "-smoke",
+    )
+    base.update(extra)
+    return dataclasses.replace(cfg, **base)

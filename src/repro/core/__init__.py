@@ -1,0 +1,26 @@
+"""repro.core — the paper's contribution: Catmull-Rom spline activation
+interpolation (Chandra, 2020), plus the fixed-point datapath model,
+activation engine, error analysis, and area model."""
+
+from .fixed_point import Q2_13, QFormat, dequantize, quantize, representable_grid
+from .catmull_rom import (
+    BASIS,
+    FixedTable,
+    SplineTable,
+    basis_weights,
+    build_fixed_table,
+    build_table,
+    interpolate,
+    interpolate_fixed,
+    interpolate_pwl,
+)
+from .activations import ActivationConfig, ActivationEngine, get_engine, tanh_table
+from .error_analysis import PAPER_TABLE_1_2, ErrorStats, table_1_2, tanh_error
+
+__all__ = [
+    "Q2_13", "QFormat", "quantize", "dequantize", "representable_grid",
+    "BASIS", "SplineTable", "FixedTable", "basis_weights", "build_table",
+    "build_fixed_table", "interpolate", "interpolate_fixed", "interpolate_pwl",
+    "ActivationConfig", "ActivationEngine", "get_engine", "tanh_table",
+    "PAPER_TABLE_1_2", "ErrorStats", "table_1_2", "tanh_error",
+]

@@ -1,0 +1,219 @@
+"""Activation engine: every element-wise nonlinearity in the framework is
+routed through here, selected by config.
+
+Backends
+--------
+  exact     jnp reference (what a float accelerator computes)
+  cr        Catmull-Rom spline interpolation (the paper, float datapath)
+  cr_fixed  bit-accurate Q2.13 emulation of the paper's Fig. 3 circuit,
+            with a straight-through float-spline JVP so training works
+  pwl       piecewise-linear over the same knots (paper's baseline)
+  region    Zamanlooy-style three-region approximation [6] (pass /
+            processing / saturation), implemented at configurable precision
+  taylor    Adnan-style truncated Taylor series [8]
+  base2     Gomar-style base-2 exponential approximation [9]
+
+Functions: tanh, sigmoid, silu, gelu_tanh, softplus. sigmoid/silu/softplus
+derive from the tanh table via identities, mirroring how one hardware tanh
+unit serves a whole accelerator:
+    sigmoid(x) = (1 + tanh(x/2)) / 2          (x/2 is a wire shift)
+    silu(x)    = x * sigmoid(x)               (one extra multiplier)
+    softplus(x)= relu(x) + h(|x|),  h(u) = log(1 + e^{-u})  (own even table)
+    gelu_tanh(x) = x/2 * (1 + tanh(c*(x + 0.044715 x^3)))
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import lru_cache, partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import catmull_rom as cr
+from .fixed_point import Q2_13, QFormat, dequantize, quantize
+
+SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationConfig:
+    """How the framework computes nonlinearities (a model-config field)."""
+
+    impl: str = "exact"          # exact|cr|cr_fixed|pwl|region|taylor|base2
+    depth: int = 32              # LUT depth (paper's flagship: 32)
+    x_max: float = 4.0           # table range for tanh (paper: 4.0)
+    taylor_terms: int = 3        # for impl="taylor"
+    use_kernel: bool = False     # route through the Pallas cr_act kernel
+
+    def tag(self) -> str:
+        return f"{self.impl}-d{self.depth}"
+
+
+# --------------------------------------------------------------------------
+# table caches (host-side numpy; hashable by (fn, x_max, depth))
+# --------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def tanh_table(x_max: float, depth: int) -> cr.SplineTable:
+    return cr.build_table(np.tanh, x_max, depth, saturation=float(np.tanh(x_max)))
+
+
+@lru_cache(maxsize=None)
+def tanh_fixed_table(x_max: float, depth: int) -> cr.FixedTable:
+    return cr.build_fixed_table(np.tanh, x_max, depth)
+
+
+@lru_cache(maxsize=None)
+def softplus_residual_table(x_max: float, depth: int) -> cr.SplineTable:
+    # h(u) = log(1 + e^-u) on [0, x_max); saturates toward 0. The k=-1
+    # boundary knot uses the natural analytic extension h(-p) = log(1+e^p),
+    # NOT an even reflection (h is smooth but not even at 0).
+    fn = lambda u: np.log1p(np.exp(-u))
+    return cr.build_table(fn, x_max, depth, saturation=float(np.log1p(np.exp(-x_max))))
+
+
+# --------------------------------------------------------------------------
+# tanh backends
+# --------------------------------------------------------------------------
+
+def _tanh_cr(x, cfg: ActivationConfig):
+    if cfg.use_kernel:
+        from repro.kernels import ops as kernel_ops  # lazy: avoid cycle
+        return kernel_ops.cr_act(x, table=tanh_table(cfg.x_max, cfg.depth))
+    return cr.interpolate(tanh_table(cfg.x_max, cfg.depth), x)
+
+
+def _tanh_pwl(x, cfg: ActivationConfig):
+    return cr.interpolate_pwl(tanh_table(cfg.x_max, cfg.depth), x)
+
+
+def _make_tanh_cr_fixed(cfg: ActivationConfig):
+    ftab = tanh_fixed_table(cfg.x_max, cfg.depth)
+    table = tanh_table(cfg.x_max, cfg.depth)
+
+    @jax.custom_jvp
+    def tanh_cr_fixed(x):
+        orig = x.dtype
+        xq = quantize(x.astype(jnp.float32), ftab.fmt)
+        yq = cr.interpolate_fixed(ftab, xq)
+        return dequantize(yq, ftab.fmt).astype(orig)
+
+    @tanh_cr_fixed.defjvp
+    def _jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        y = tanh_cr_fixed(x)
+        # straight-through: derivative of the float spline (C^1)
+        dy = jax.jvp(lambda v: cr.interpolate(table, v), (x,), (dx,))[1]
+        return y, dy
+
+    return tanh_cr_fixed
+
+
+def _tanh_region(x, cfg: ActivationConfig):
+    """Three-region approximation in the spirit of [6] (Zamanlooy).
+
+    pass region |x| < 0.25: y = x; saturation |x| > 3: y = sign(x);
+    processing region: a coarse quantized piecewise map (here: PWL over an
+    8-entry table quantized to 6 fractional bits, matching the 6-bit
+    precision reported for [6] in Table III).
+    """
+    tab = tanh_table(3.0, 8)
+    ax = jnp.abs(x)
+    proc = cr.interpolate_pwl(tab, ax, odd=False)
+    proc = jnp.round(proc * 64.0) / 64.0  # 6-bit output quantization
+    y = jnp.where(ax < 0.25, ax, jnp.where(ax > 3.0, jnp.ones_like(ax), proc))
+    return jnp.sign(x) * y
+
+
+def _tanh_taylor(x, cfg: ActivationConfig):
+    """Truncated odd Taylor series x - x^3/3 + 2x^5/15 - 17x^7/315 [8],
+    clamped to +-1 (the series diverges fast outside |x|<~1.7)."""
+    coeffs = [1.0, -1.0 / 3.0, 2.0 / 15.0, -17.0 / 315.0][: cfg.taylor_terms]
+    x2 = x * x
+    acc = jnp.zeros_like(x)
+    for c in reversed(coeffs):
+        acc = acc * x2 + c
+    return jnp.clip(acc * x, -1.0, 1.0)
+
+
+def _tanh_base2(x, cfg: ActivationConfig):
+    """Gomar-style [9]: tanh via base-2 exponentials,
+    tanh(x) = (2^{ax} - 2^{-ax}) / (2^{ax} + 2^{-ax}) with a = 2/ln(2).
+
+    Hardware uses a shift-based 2^x unit; here exp2 models it. The method's
+    error (RMSE ~0.018 reported) comes from the piecewise 2^x unit; we model
+    that by quantizing the exponent path to 5 fractional bits.
+    """
+    a = 2.0 / math.log(2.0)
+    e = a * x / 2.0
+    e = jnp.round(e * 32.0) / 32.0   # coarse exponent path
+    p = jnp.exp2(e)
+    n = jnp.exp2(-e)
+    return (p - n) / (p + n)
+
+
+_TANH_BACKENDS: dict[str, Callable] = {
+    "exact": lambda x, cfg: jnp.tanh(x),
+    "cr": _tanh_cr,
+    "pwl": _tanh_pwl,
+    "region": _tanh_region,
+    "taylor": _tanh_taylor,
+    "base2": _tanh_base2,
+}
+
+
+# --------------------------------------------------------------------------
+# engine
+# --------------------------------------------------------------------------
+
+class ActivationEngine:
+    """Configured set of nonlinearities. Instances are cheap; tables are
+    cached globally. Use as: ``act = ActivationEngine(cfg); act.silu(x)``."""
+
+    def __init__(self, cfg: ActivationConfig | None = None):
+        self.cfg = cfg or ActivationConfig()
+        if self.cfg.impl == "cr_fixed":
+            self._tanh = _make_tanh_cr_fixed(self.cfg)
+        else:
+            backend = _TANH_BACKENDS[self.cfg.impl]
+            self._tanh = partial(backend, cfg=self.cfg)
+
+    # -- primitives ---------------------------------------------------
+    def tanh(self, x):
+        return self._tanh(x)
+
+    def sigmoid(self, x):
+        if self.cfg.impl == "exact":
+            return jax.nn.sigmoid(x)
+        return 0.5 * (1.0 + self.tanh(x * 0.5))
+
+    def silu(self, x):
+        if self.cfg.impl == "exact":
+            return jax.nn.silu(x)
+        return x * self.sigmoid(x)
+
+    def gelu_tanh(self, x):
+        if self.cfg.impl == "exact":
+            return jax.nn.gelu(x, approximate=True)
+        inner = SQRT_2_OVER_PI * (x + 0.044715 * (x * x * x))
+        return 0.5 * x * (1.0 + self.tanh(inner))
+
+    def softplus(self, x):
+        if self.cfg.impl == "exact":
+            return jax.nn.softplus(x)
+        tab = softplus_residual_table(max(self.cfg.x_max, 8.0),
+                                      max(self.cfg.depth, 64))
+        h = cr.interpolate(tab, jnp.abs(x), odd=False)
+        return jax.nn.relu(x) + h
+
+    def __call__(self, name: str, x):
+        return getattr(self, name)(x)
+
+
+def get_engine(cfg: ActivationConfig | dict | None = None) -> ActivationEngine:
+    if isinstance(cfg, dict):
+        cfg = ActivationConfig(**cfg)
+    return ActivationEngine(cfg)

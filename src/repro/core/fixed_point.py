@@ -1,0 +1,135 @@
+"""Q-format fixed-point arithmetic, bit-accurate with the paper's datapath.
+
+The paper uses a 16-bit signed representation on the range (-4, 4):
+1 sign bit + 2 integer bits + 13 fraction bits = Q2.13. All datapath
+arithmetic here is emulated with int32 lattice values so that the
+``cr_fixed`` activation backend models the Fig. 3 circuit exactly:
+every product is truncated back to the target fraction width and every
+sum saturates at the representable range, as a fixed-width MAC would.
+
+These helpers are pure jnp and usable inside jit / Pallas (interpret).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Signed fixed-point format: 1 sign bit, ``int_bits`` integer bits,
+    ``frac_bits`` fraction bits."""
+
+    int_bits: int
+    frac_bits: int
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.frac_bits
+
+    @property
+    def max_int(self) -> int:
+        return (1 << (self.int_bits + self.frac_bits)) - 1
+
+    @property
+    def min_int(self) -> int:
+        return -(1 << (self.int_bits + self.frac_bits))
+
+    @property
+    def resolution(self) -> float:
+        return 1.0 / self.scale
+
+    def __str__(self) -> str:  # e.g. "Q2.13"
+        return f"Q{self.int_bits}.{self.frac_bits}"
+
+
+# The paper's format: 16-bit signed, range (-4, 4), resolution 2^-13.
+Q2_13 = QFormat(int_bits=2, frac_bits=13)
+
+
+def quantize(x, fmt: QFormat = Q2_13, rounding: str = "nearest"):
+    """float -> integer lattice (int32), saturating.
+
+    numpy inputs are quantized host-side in float64 (table building);
+    jax inputs stay in their own precision (datapath emulation).
+    """
+    if isinstance(x, (np.ndarray, np.floating, float)):
+        scaled = np.asarray(x, np.float64) * fmt.scale
+        q = np.round(scaled) if rounding == "nearest" else np.floor(scaled)
+        return jnp.asarray(np.clip(q, fmt.min_int, fmt.max_int), jnp.int32)
+    scaled = x * fmt.scale
+    if rounding == "nearest":
+        q = jnp.round(scaled)
+    elif rounding == "floor":
+        q = jnp.floor(scaled)
+    else:
+        raise ValueError(f"unknown rounding {rounding!r}")
+    q = jnp.clip(q, fmt.min_int, fmt.max_int)
+    return q.astype(jnp.int32)
+
+
+def dequantize(q, fmt: QFormat = Q2_13):
+    return q.astype(jnp.float32) * jnp.float32(fmt.resolution)
+
+
+def sat(q, fmt: QFormat = Q2_13):
+    """Saturate an int32 lattice value into fmt's representable range."""
+    return jnp.clip(q, fmt.min_int, fmt.max_int)
+
+
+def fx_add(a, b, fmt: QFormat = Q2_13):
+    """Saturating fixed-point add (same format in/out)."""
+    return sat(a + b, fmt)
+
+
+def fx_mul(a, b, fmt: QFormat = Q2_13, rounding: str = "floor"):
+    """Fixed-point multiply: (a*b) >> frac_bits, truncating like hardware.
+
+    ``floor`` (arithmetic shift right) is what a plain wire-shift does;
+    ``nearest`` models a rounding adder on the product.
+    """
+    prod = a.astype(jnp.int64) * b.astype(jnp.int64)
+    if rounding == "floor":
+        shifted = prod >> fmt.frac_bits
+    elif rounding == "nearest":
+        shifted = (prod + (1 << (fmt.frac_bits - 1))) >> fmt.frac_bits
+    else:
+        raise ValueError(f"unknown rounding {rounding!r}")
+    return sat(shifted.astype(jnp.int32), fmt)
+
+
+def fx_dot4(p, c, fmt: QFormat = Q2_13, rounding: str = "nearest",
+            extra_shift: int = 0):
+    """4-tap MAC: sum_i p[i]*c[i] with a wide accumulator.
+
+    ``p``/``c``: int32 arrays whose last axis has length 4 (the paper's
+    P-vector of control points and t-vector of basis polynomial values).
+    Models the Fig. 2 MAC the way real MACs work: full-width products are
+    accumulated (Q 2*frac) and a single shift-with-round produces the
+    Q2.13 output, which then saturates.
+    """
+    prods = p.astype(jnp.int64) * c.astype(jnp.int64)
+    acc = jnp.sum(prods, axis=-1)
+    shift = fmt.frac_bits + extra_shift
+    if rounding == "nearest":
+        acc = (acc + (1 << (shift - 1))) >> shift
+    else:
+        acc = acc >> shift
+    return sat(acc.astype(jnp.int32), fmt)
+
+
+def representable_grid(fmt: QFormat = Q2_13) -> np.ndarray:
+    """Every representable value of ``fmt`` as float64 (exhaustive test grid).
+
+    For Q2.13 this is 2^16 = 65536 points spanning [-4, 4): exactly the
+    16-bit signed input space the paper's error tables integrate over.
+    """
+    ints = np.arange(fmt.min_int, fmt.max_int + 1, dtype=np.int64)
+    return ints.astype(np.float64) / fmt.scale

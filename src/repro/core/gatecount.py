@@ -1,0 +1,127 @@
+"""Analytic NAND2-equivalent gate-count model (stands in for RTL synthesis).
+
+We cannot run Synopsys/Cadence in this environment; the paper's Table III
+compares synthesized gate counts. This model counts datapath structures at
+textbook NAND2-equivalent costs and is applied uniformly to every variant
+we build, so *relative* area comparisons are meaningful. Published numbers
+for external works ([5],[6],[10]) are quoted verbatim, as the paper itself
+does for [10].
+
+Cost basis (NAND2-equivalents, standard-cell folklore):
+  full adder            6   (2xXOR=8 is pessimistic; mirror FA ~ 6)
+  half adder            3
+  2:1 mux (per bit)     3
+  register (per bit)    8   (scan DFF)
+  AND/OR/XOR            1 / 1 / 3
+Array multiplier n x m: n*m AND + (n-1) m-bit adder rows -> ~ n*m + 6*(n-1)*m,
+with a 0.75 optimization factor for Booth/Wallace synthesis results.
+Constant-LUT-as-logic (k entries x n bits): synthesis collapses a constant
+table to roughly 0.75 gates per stored bit after Boolean minimization.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+FA = 6.0
+MUX_BIT = 3.0
+LUT_BIT = 0.75
+MULT_OPT = 0.75
+
+
+def adder(bits: int) -> float:
+    return FA * bits
+
+
+def multiplier(n: int, m: int) -> float:
+    return MULT_OPT * (n * m + FA * (n - 1) * m) if min(n, m) > 0 else 0.0
+
+
+def mux(bits: int, ways: int = 2) -> float:
+    return MUX_BIT * bits * (ways - 1)
+
+
+def const_lut(entries: int, bits: int) -> float:
+    return LUT_BIT * entries * bits
+
+
+@dataclasses.dataclass
+class AreaReport:
+    name: str
+    gates: float
+    memory_kbits: float
+    breakdown: dict
+
+    def row(self):
+        return (self.name, round(self.gates), self.memory_kbits)
+
+
+TRUNC_MULT = 0.55   # truncated multiplier keeping only needed top columns
+
+
+def cr_spline_datapath(frac_bits: int = 13, depth: int = 32,
+                       t_in_lut: bool = False, x_int_bits: int = 2) -> AreaReport:
+    """The paper's Fig. 2/3 datapath, at the EXACT widths the bit-accurate
+    emulation (core/catmull_rom.py interpolate_fixed) carries:
+
+    - |x| / sign fixup: one n-bit negate-mux pair;
+    - control-point LUT: depth x frac_bits as random logic (+1 window
+      neighbor wiring, free);
+    - t-vector: t has t_bits significant lsbs, so t^2 (t_bits x t_bits)
+      and t^3 (2t_bits x t_bits) multipliers are EXACT and small; the four
+      basis polynomials are integer-coefficient shift-adds at 3t_bits+2
+      width (7 adders; x3 and x5 factors counted as their adds). The
+      t_in_lut=True variant stores the 4 basis values in a second LUT of
+      2^t_bits x 4 x frac_bits instead (the paper's faster/bigger option);
+    - 4-tap MAC: 4 truncated multipliers (full product width never stored:
+      only the top columns that survive the single final shift-round are
+      formed, standard truncated-multiplier design) + 3-adder tree;
+    - saturation compare + mux.
+    """
+    n = frac_bits
+    in_bits = 1 + x_int_bits + frac_bits
+    # t_bits: lsbs of the magnitude below the LUT index (depth segments
+    # over [0, x_max = 2^x_int_bits))
+    import math
+    t_bits = x_int_bits + frac_bits - int(math.log2(depth))
+    b: dict[str, float] = {}
+    b["abs+sign"] = adder(in_bits) + mux(in_bits)
+    b["lut_control_points"] = const_lut(depth, n)
+    if t_in_lut:
+        b["t_vector_lut"] = const_lut(2 ** t_bits, 4 * n)
+        wide = n + 2
+    else:
+        b["t_sq_mult"] = multiplier(t_bits, t_bits)
+        b["t_cube_mult"] = multiplier(2 * t_bits, t_bits)
+        b["basis_combine_adds"] = 7 * adder(3 * t_bits + 2)
+        wide = 3 * t_bits + 2
+    b["mac_mults"] = 4 * TRUNC_MULT * multiplier(n + 1, wide)
+    b["mac_adder_tree"] = 3 * adder(n + 3)
+    b["saturation"] = adder(n) + mux(n)
+    total = sum(b.values())
+    return AreaReport(
+        name=f"CR spline (depth={depth}, {n}b{', t-LUT' if t_in_lut else ''})",
+        gates=total, memory_kbits=0.0, breakdown=b)
+
+
+def pwl_datapath(frac_bits: int = 13, depth: int = 32) -> AreaReport:
+    """PWL interpolator: value LUT + slope mult + add (for Table III context)."""
+    n = frac_bits
+    b = {
+        "abs+sign": adder(n) + mux(n),
+        "lut_values": const_lut(depth + 1, n),
+        "slope_mult": multiplier(n, n),
+        "add": adder(n),
+        "saturation": adder(n) + mux(n),
+    }
+    return AreaReport(name=f"PWL (depth={depth}, {n}b)", gates=sum(b.values()),
+                      memory_kbits=0.0, breakdown=b)
+
+
+# Published Table III rows, quoted verbatim (we did not synthesize these).
+PUBLISHED = [
+    dict(work="[5] RALUT", precision=10, gates=515, memory_kbits=0.0, max_err=0.0189),
+    dict(work="[6] region", precision=6, gates=129, memory_kbits=0.0, max_err=0.0196),
+    dict(work="[10] DCTIF", precision=11, gates=230, memory_kbits=22.17, max_err=0.00050),
+    dict(work="[10] DCTIF", precision=16, gates=800, memory_kbits=1250.5, max_err=0.00010),
+    dict(work="paper CR (published)", precision=13, gates=5840, memory_kbits=0.0, max_err=0.000152),
+]

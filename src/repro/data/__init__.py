@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticPipeline, eval_batches  # noqa: F401

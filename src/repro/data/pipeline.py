@@ -1,0 +1,178 @@
+"""Deterministic synthetic token pipeline — shard-aware and resumable.
+
+Design constraints (DESIGN.md §8):
+  * **Step-indexed determinism**: batch(step) is a pure function of
+    (seed, step, shape). Restarting from a checkpoint at step k replays
+    exactly the batches an uninterrupted run would have seen — the
+    checkpoint only has to store (seed, step), never a cursor or buffer.
+  * **Shard-aware**: on a multi-host deployment each host materializes
+    only its slice of the global batch (host_id/host_count fan-out of
+    the same PRNG lattice — no host ever generates another host's rows).
+  * **Structured, learnable data**: tokens are NOT iid noise. Sequences
+    come from a mixture of deterministic generative grammars (Markov
+    chains with per-seed transition structure, copy runs, arithmetic-like
+    progressions), so a real model trained on them shows a falling loss —
+    the end-to-end convergence tests and examples rely on that.
+
+The same module serves the modality stubs: `patch_embeds` for the VLM
+frontend and `mrope_positions` grids, and multi-codebook token planes for
+the audio arch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    vocab_size: int = 1024          # sampling range (<= model vocab)
+    # mixture weights over generators (renormalized)
+    w_markov: float = 0.5
+    w_copy: float = 0.3
+    w_progression: float = 0.2
+    markov_order: int = 1
+    branching: int = 8              # successors per state in the chain
+    copy_period_max: int = 64
+
+
+def _batch_key(seed: int, step, host_id: int = 0):
+    """PRNG key lattice: (seed) -> fold step -> fold host."""
+    k = jax.random.key(seed)
+    k = jax.random.fold_in(k, step)
+    return jax.random.fold_in(k, host_id)
+
+
+# ---------------------------------------------------------------------------
+# generators (all jit-able; shapes static)
+# ---------------------------------------------------------------------------
+
+def _markov_rows(key, b, s, cfg: DataConfig):
+    """Per-seed sparse Markov chain: state v can transition only to
+    (v * 2654435761 + j) % vocab for j < branching. Next-token entropy is
+    log(branching) << log(vocab): learnable structure."""
+    V, Br = cfg.vocab_size, cfg.branching
+    k0, k1 = jax.random.split(key)
+    x0 = jax.random.randint(k0, (b,), 0, V)
+    choices = jax.random.randint(k1, (b, s), 0, Br)
+
+    def step(v, j):
+        # int32 LCG-style hash (wraps deterministically), folded into [0, V)
+        h = v * jnp.int32(1103515245) + j * jnp.int32(40503) + jnp.int32(1)
+        nxt = jnp.abs(h) % V
+        return nxt, nxt
+
+    def row(x0_i, ch_i):
+        _, toks = jax.lax.scan(step, x0_i, ch_i)
+        return toks
+
+    return jax.vmap(row)(x0, choices)
+
+
+def _copy_rows(key, b, s, cfg: DataConfig):
+    """Periodic copy task: a random prefix of length p repeats. The model
+    can drive loss to ~0 on the repeated spans via attention/state."""
+    V = cfg.vocab_size
+    k0, k1 = jax.random.split(key)
+    p = jax.random.randint(k0, (b, 1), 4, cfg.copy_period_max)
+    base = jax.random.randint(k1, (b, s), 0, V)
+    pos = jnp.arange(s)[None, :]
+    src = pos % p
+    return jnp.take_along_axis(base, src, axis=1)
+
+
+def _progression_rows(key, b, s, cfg: DataConfig):
+    """Arithmetic progressions mod vocab: token_t = a + t*d (mod V)."""
+    V = cfg.vocab_size
+    k0, k1 = jax.random.split(key)
+    a = jax.random.randint(k0, (b, 1), 0, V)
+    d = jax.random.randint(k1, (b, 1), 1, 17)
+    t = jnp.arange(s, dtype=jnp.int32)[None, :]
+    return (a + t * d) % V
+
+
+def _mix_rows(key, b, s, cfg: DataConfig):
+    kg, ks = jax.random.split(key)
+    ws = jnp.asarray([cfg.w_markov, cfg.w_copy, cfg.w_progression])
+    gen_id = jax.random.categorical(kg, jnp.log(ws / ws.sum()), shape=(b,))
+    rows = jnp.stack([
+        _markov_rows(ks, b, s, cfg),
+        _copy_rows(ks, b, s, cfg),
+        _progression_rows(ks, b, s, cfg),
+    ])                                                     # [3, b, s]
+    return rows[gen_id, jnp.arange(b)]                     # [b, s]
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+class SyntheticPipeline:
+    """batch = pipeline(step). State is *implicit* — resuming = calling
+    with a later step. `host_id`/`host_count` slice the global batch for
+    multi-host runs (each host gets contiguous rows; the global batch is
+    identical regardless of host count)."""
+
+    def __init__(self, model_cfg: ModelConfig, data_cfg: DataConfig,
+                 global_batch: int, seq_len: int, *,
+                 host_id: int = 0, host_count: int = 1):
+        if global_batch % host_count:
+            raise ValueError(
+                f"global_batch {global_batch} not divisible by "
+                f"host_count {host_count}")
+        self.model_cfg = model_cfg
+        self.cfg = dataclasses.replace(
+            data_cfg, vocab_size=min(data_cfg.vocab_size, model_cfg.vocab_size))
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.host_id = host_id
+        self.host_count = host_count
+        self.local_batch = global_batch // host_count
+        self._gen = jax.jit(partial(self._generate))
+
+    # one extra token so labels are a clean shift
+    def _generate(self, step):
+        cfg, mc = self.cfg, self.model_cfg
+        b, s = self.local_batch, self.seq_len + 1
+        key = _batch_key(cfg.seed, step, self.host_id)
+        K = mc.n_codebooks
+        if K > 1:
+            keys = jax.random.split(key, K)
+            planes = [_mix_rows(keys[k], b, s, cfg) for k in range(K)]
+            toks = jnp.stack(planes, axis=-1)              # [b, s, K]
+            tokens, labels = toks[:, :-1], toks[:, 1:]
+        else:
+            toks = _mix_rows(key, b, s, cfg)               # [b, s]
+            tokens, labels = toks[:, :-1], toks[:, 1:]
+        batch = {"tokens": tokens.astype(jnp.int32),
+                 "labels": labels.astype(jnp.int32)}
+        if mc.rope_kind == "mrope":
+            pos = jnp.arange(self.seq_len, dtype=jnp.int32)
+            batch["mrope_positions"] = jnp.broadcast_to(
+                pos[None, :, None], (b, self.seq_len, 3))
+        if mc.patch_embed_input:
+            kp = jax.random.fold_in(key, 7)
+            batch["patch_embeds"] = 0.02 * jax.random.normal(
+                kp, (b, self.seq_len, mc.d_model),
+                jnp.dtype(mc.compute_dtype))
+        return batch
+
+    def __call__(self, step: int):
+        return self._gen(jnp.int32(step))
+
+    def state(self, step: int) -> dict:
+        """What a checkpoint needs to resume this pipeline exactly."""
+        return {"seed": self.cfg.seed, "step": int(step),
+                "global_batch": self.global_batch, "seq_len": self.seq_len}
+
+
+def eval_batches(pipeline: SyntheticPipeline, n: int, start_step: int = 10**6):
+    """Deterministic held-out batches (disjoint step range from training)."""
+    return [pipeline(start_step + i) for i in range(n)]

@@ -1,0 +1,1 @@
+from .driver import FTConfig, SimulatedPreemption, StepRecord, TrainDriver  # noqa: F401

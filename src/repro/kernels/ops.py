@@ -1,0 +1,106 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles: arbitrary leading dims (flattened to rows), padding to block
+multiples, dtype pass-through, and interpret-mode selection (CPU backend
+executes kernels in interpret mode; TPU compiles them).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import catmull_rom as cr
+from repro.core.activations import tanh_table
+
+from . import cr_act as _cr_act_mod
+from . import fused_glu as _fused_glu_mod
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("period", "x_max", "saturation",
+                                             "lookup", "interpret",
+                                             "block_rows", "block_cols"))
+def _cr_act_impl(x, windows, *, period, x_max, saturation, lookup, interpret,
+                 block_rows, block_cols):
+    orig_shape = x.shape
+    cols = orig_shape[-1]
+    rows = int(np.prod(orig_shape[:-1])) if len(orig_shape) > 1 else 1
+    x2 = x.reshape(rows, cols)
+    # pick blocks no larger than the (padded) array
+    br = min(block_rows, _pad_to(rows, 8))
+    bc = min(block_cols, _pad_to(cols, 128))
+    pr, pc = _pad_to(rows, br), _pad_to(cols, bc)
+    if (pr, pc) != (rows, cols):
+        x2 = jnp.pad(x2, ((0, pr - rows), (0, pc - cols)))
+    y = _cr_act_mod.cr_act_2d(
+        x2, windows, period=period, x_max=x_max,
+        saturation=saturation, lookup=lookup,
+        block_rows=br, block_cols=bc, interpret=interpret)
+    return y[:rows, :cols].reshape(orig_shape)
+
+
+def cr_act(x, table: cr.SplineTable | None = None, *, lookup: str = "onehot",
+           interpret: bool | None = None,
+           block_rows: int = _cr_act_mod.DEFAULT_BLOCK_ROWS,
+           block_cols: int = _cr_act_mod.DEFAULT_BLOCK_COLS):
+    """CR-spline tanh via the Pallas kernel. ``table`` defaults to the
+    paper's flagship (x_max=4, depth=32)."""
+    table = table or tanh_table(4.0, 32)
+    if interpret is None:
+        interpret = _interpret_default()
+    windows = jnp.asarray(table.windows, jnp.float32)
+    return _cr_act_impl(x, windows, period=table.period, x_max=table.x_max,
+                        saturation=table.saturation, lookup=lookup,
+                        interpret=interpret, block_rows=block_rows,
+                        block_cols=block_cols)
+
+
+@functools.partial(jax.jit, static_argnames=("period", "x_max", "saturation",
+                                             "act", "interpret",
+                                             "block_m", "block_n", "block_k"))
+def _fused_glu_impl(x, w_gate, w_up, windows, *, period, x_max, saturation,
+                    act, interpret, block_m, block_n, block_k):
+    orig_shape = x.shape
+    k = orig_shape[-1]
+    m = int(np.prod(orig_shape[:-1])) if len(orig_shape) > 1 else 1
+    n = w_gate.shape[-1]
+    x2 = x.reshape(m, k)
+    bm = min(block_m, _pad_to(m, 8))
+    bn = min(block_n, _pad_to(n, 128))
+    bk = min(block_k, _pad_to(k, 128))
+    pm, pn, pk = _pad_to(m, bm), _pad_to(n, bn), _pad_to(k, bk)
+    if (pm, pk) != (m, k):
+        x2 = jnp.pad(x2, ((0, pm - m), (0, pk - k)))
+    wg, wu = w_gate, w_up
+    if (pk, pn) != (k, n):
+        wg = jnp.pad(wg, ((0, pk - k), (0, pn - n)))
+        wu = jnp.pad(wu, ((0, pk - k), (0, pn - n)))
+    y = _fused_glu_mod.fused_glu_2d(
+        x2, wg, wu, windows, period=period, x_max=x_max,
+        saturation=saturation, act=act,
+        block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    return y[:m, :n].reshape(orig_shape[:-1] + (n,))
+
+
+def fused_glu(x, w_gate, w_up, table: cr.SplineTable | None = None, *,
+              act: str = "silu", interpret: bool | None = None,
+              block_m: int = 128, block_n: int = 128, block_k: int = 512):
+    """act_cr(x @ w_gate) * (x @ w_up) in one fused Pallas kernel."""
+    table = table or tanh_table(4.0, 32)
+    if interpret is None:
+        interpret = _interpret_default()
+    windows = jnp.asarray(table.windows, jnp.float32)
+    return _fused_glu_impl(x, w_gate, w_up, windows, period=table.period,
+                           x_max=table.x_max, saturation=table.saturation,
+                           act=act, interpret=interpret, block_m=block_m,
+                           block_n=block_n, block_k=block_k)

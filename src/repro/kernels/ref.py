@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels are validated against
+(same math, no tiling): tests sweep shapes/dtypes and assert_allclose.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import catmull_rom as cr
+from repro.core.activations import SQRT_2_OVER_PI
+
+
+def cr_act_ref(x, table: cr.SplineTable):
+    """Oracle for cr_act: float CR interpolation (odd, saturating)."""
+    y = cr.interpolate(table, x.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def _tanh_ref(v, table: cr.SplineTable):
+    return cr.interpolate(table, v)
+
+
+def fused_glu_ref(x, w_gate, w_up, table: cr.SplineTable, act: str = "silu"):
+    """Oracle for fused_glu: unfused f32 matmuls + float CR epilogue."""
+    xf = x.astype(jnp.float32)
+    gate = xf @ w_gate.astype(jnp.float32)
+    up = xf @ w_up.astype(jnp.float32)
+    if act == "silu":
+        y = gate * (0.5 * (1.0 + _tanh_ref(gate * 0.5, table))) * up
+    elif act == "gelu_tanh":
+        inner = SQRT_2_OVER_PI * (gate + 0.044715 * gate ** 3)
+        y = 0.5 * gate * (1.0 + _tanh_ref(inner, table)) * up
+    elif act == "tanh":
+        y = _tanh_ref(gate, table) * up
+    else:
+        raise ValueError(act)
+    return y.astype(x.dtype)

@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+record memory/cost/roofline terms.
+
+The two lines above MUST stay the first statements in this module: jax
+locks the device count on first init, and the production meshes need 512
+placeholder host devices. Nothing else in the repo sets this flag.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b \
+        --shape train_4k --mesh single                            # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+
+Results are cached incrementally in experiments/dryrun/*.json; pass
+--force to recompute.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.analysis import roofline as rl
+from repro.configs import registry
+from repro.launch import shapes as shp
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.parallel import partition as part
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+MESHES = {"single": False, "multi": True}
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             rules: dict | None = None, hyper=None, tag: str = "") -> dict:
+    cfg = registry.get(arch)
+    shape = shp.SHAPES[shape_name]
+    if not shp.applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped",
+                "reason": "full-attention arch: 512k dense KV cache is the "
+                          "quadratic regime long_500k excludes (DESIGN.md §5)"}
+    mesh = make_production_mesh(multi_pod=MESHES[mesh_name])
+    n_dev = mesh.size
+    hyper = hyper or steps_mod.TrainHyper()
+    t0 = time.time()
+    with part.axis_rules(mesh, rules):
+        fn, args = steps_mod.build_cell(cfg, shape, mesh, rules=rules,
+                                        hyper=hyper)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    roof = rl.analyze(compiled, n_devices=n_dev,
+                      model_flops=rl.model_flops_for(cfg, shape),
+                      hlo_text=hlo_text)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+        "status": "ok",
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": mem.argument_size_in_bytes
+                + mem.output_size_in_bytes + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes,
+        },
+        "roofline": {
+            "flops_per_device": roof.flops,
+            "hbm_bytes_per_device": roof.hbm_bytes,
+            "collective_bytes_per_device": roof.collective_bytes,
+            "compute_s": roof.compute_s,
+            "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s,
+            "bottleneck": roof.bottleneck,
+            "model_flops": roof.model_flops,
+            "useful_ratio": roof.useful_ratio,
+            "mfu_bound": roof.mfu_bound,
+            "collective_bytes_by_kind": roof.collectives.bytes_by_kind,
+            "collective_count_by_kind": roof.collectives.count_by_kind,
+            # raw XLA numbers (while bodies counted once) as cross-check
+            "xla_flops_per_device": roof.xla_flops,
+            "xla_bytes_per_device": roof.xla_bytes,
+            "unknown_trip_whiles": roof.unknown_trip_whiles,
+        },
+    }
+    return result
+
+
+def cell_path(arch, shape, mesh, tag="") -> Path:
+    suffix = f"__{tag}" if tag else ""
+    return RESULTS_DIR / f"{arch}__{shape}__{mesh}{suffix}.json"
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None, choices=list(shp.SHAPES) + [None])
+    p.add_argument("--mesh", default=None, choices=["single", "multi", None])
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--list", action="store_true")
+    p.add_argument("--tag", default="")
+    args = p.parse_args()
+
+    archs = [args.arch] if args.arch else registry.assigned_archs()
+    shapes = [args.shape] if args.shape else list(shp.SHAPES)
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+
+    if args.list:
+        for a in archs:
+            for s in shapes:
+                for m in meshes:
+                    print(f"{a} x {s} x {m}")
+        return
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                path = cell_path(a, s, m, args.tag)
+                if path.exists() and not args.force:
+                    cached = json.loads(path.read_text())
+                    print(f"[cached] {a} x {s} x {m}: {cached['status']}")
+                    continue
+                print(f"[run]    {a} x {s} x {m} ...", flush=True)
+                try:
+                    res = run_cell(a, s, m, tag=args.tag)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    res = {"arch": a, "shape": s, "mesh": m, "tag": args.tag,
+                           "status": "error", "error": str(e)[:2000],
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures.append((a, s, m, str(e)[:200]))
+                path.write_text(json.dumps(res, indent=1))
+                st = res["status"]
+                if st == "ok":
+                    r = res["roofline"]
+                    print(f"         ok: lower {res['lower_s']}s compile "
+                          f"{res['compile_s']}s | bottleneck {r['bottleneck']} "
+                          f"| mfu_bound {r['mfu_bound']:.3f} "
+                          f"| peak/dev {res['memory']['peak_estimate_bytes']/2**30:.2f} GiB",
+                          flush=True)
+                else:
+                    print(f"         {st}: {res.get('reason', res.get('error', ''))[:200]}",
+                          flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f)
+        raise SystemExit(1)
+    print("\nall requested cells done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+"""Step-function builders: the jit-able (and dry-run-lowerable) units.
+
+  train_step  : fwd + loss + bwd + clip + (optional int8 EF compression)
+                + AdamW update. Donates params/opt state.
+  prefill_step: fwd, returns (last logits, filled cache).
+  serve_step  : one-token decode against a donated cache.
+
+Shardings are resolved from logical axes via the active rule table, so
+the same builder serves 1-device smoke tests and the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.activations import ActivationEngine
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw, compress
+from repro.parallel import partition as part
+
+from . import shapes as shp
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    opt: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+    remat: str = "block"          # none | block | dots
+    grad_compression: bool = False
+    z_loss: float = 1e-4
+    skip_nonfinite: bool = True   # NaN/inf grads -> keep old params (in-jit)
+    microbatches: int = 1         # grad accumulation: split the batch dim
+                                  # into n sequential microbatches (scan);
+                                  # activation residency shrinks ~n-fold —
+                                  # the HBM-fit knob for big train cells
+                                  # (EXPERIMENTS.md §Dry-run)
+
+
+def opt_state_axes(params_axes):
+    return {
+        "m": params_axes,
+        "v": params_axes,
+        "count": (),
+    }
+
+
+def make_train_step(cfg: ModelConfig, hyper: TrainHyper = TrainHyper()):
+    engine = ActivationEngine(cfg.activation)
+
+    def grads_of(params, batch):
+        def loss_of(p):
+            return M.loss_fn(p, batch, cfg, engine, remat=hyper.remat,
+                             z_loss=hyper.z_loss)
+        return jax.value_and_grad(loss_of, has_aux=True)(params)
+
+    def accumulate(params, batch):
+        """Sequential microbatch gradient accumulation via lax.scan:
+        peak activation residency drops ~n-fold, grads/loss are the mean
+        over microbatches (identical expectation to the monolithic step)."""
+        n = hyper.microbatches
+        micro = jax.tree.map(
+            lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch)
+
+        def body(acc, mb):
+            (loss_i, metrics_i), g_i = grads_of(params, mb)
+            acc_g, acc_l, acc_m = acc
+            return (jax.tree.map(jnp.add, acc_g, g_i), acc_l + loss_i,
+                    jax.tree.map(jnp.add, acc_m, metrics_i)), None
+
+        zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params)
+        zero_metrics = {"nll": jnp.float32(0.0), "aux": jnp.float32(0.0)}
+        (g, loss, metrics), _ = jax.lax.scan(
+            body, (zeros_g, jnp.float32(0.0), zero_metrics), micro)
+        inv = 1.0 / n
+        return ((loss * inv, jax.tree.map(lambda v: v * inv, metrics)),
+                jax.tree.map(lambda v: v * inv, g))
+
+    def train_step(params, opt_state, batch, step):
+        if hyper.microbatches > 1:
+            (loss, metrics), grads = accumulate(params, batch)
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        grads, gnorm = adamw.clip_by_global_norm(grads, hyper.opt.clip_norm)
+        if hyper.grad_compression:
+            grads, new_err = compress.compress_grads(grads, opt_state["error"])
+        lr = adamw.cosine_schedule(hyper.opt, step)
+        inner = {k: opt_state[k] for k in ("m", "v", "count")}
+        new_params, new_inner = adamw.adamw_update(grads, inner, params,
+                                                   hyper.opt, lr)
+        new_state = dict(new_inner)
+        if hyper.grad_compression:
+            new_state["error"] = new_err
+        if hyper.skip_nonfinite:
+            # NaN/inf guard inside the jitted step: a bad microbatch keeps
+            # the old params/opt state instead of poisoning the run. The
+            # driver counts skips and rolls back to a checkpoint if they
+            # persist (ft/driver.py).
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+            sel = lambda new, old: jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new, old)
+            new_params = sel(new_params, params)
+            new_state = sel(new_state, opt_state)
+            metrics = dict(metrics, skipped=(~ok).astype(jnp.int32))
+        metrics = dict(metrics, loss=loss, gnorm=gnorm, lr=lr)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, capacity: int | None = None):
+    engine = ActivationEngine(cfg.activation)
+
+    def prefill_step(params, batch):
+        return M.prefill_fn(params, batch, cfg, engine, capacity=capacity)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    engine = ActivationEngine(cfg.activation)
+
+    def serve_step(params, batch, cache):
+        return M.decode_fn(params, batch, cache, cfg, engine)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharding resolution + jit wiring for a (cfg, shape, mesh) cell
+# ---------------------------------------------------------------------------
+
+def _axes_shardings(axes_tree, shapes_tree, mesh, rules):
+    def one(axes, sds):
+        return part.make_sharding(tuple(axes), tuple(sds.shape), strict=True,
+                                  mesh=mesh, rules=rules)
+    return jax.tree.map(
+        one, axes_tree, shapes_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t))
+
+
+def build_cell(cfg: ModelConfig, shape: shp.ShapeCell, mesh, *,
+               rules: dict | None = None,
+               hyper: TrainHyper = TrainHyper(),
+               serve_dtype: str = "bfloat16"):
+    """Returns (jitted_fn, example_args_specs) for one dry-run cell.
+
+    All inputs are ShapeDtypeStructs; call .lower(*specs) on the result.
+    """
+    rules = rules or part.DEFAULT_RULES
+    pshapes, paxes = M.abstract_params(cfg)
+    psharding = _axes_shardings(paxes, pshapes, mesh, rules)
+    specs = shp.input_specs(cfg, shape)
+    baxes = shp.batch_axes(cfg, shape)
+    bsharding = _axes_shardings(baxes, specs["batch"], mesh, rules)
+
+    if shape.kind == "train":
+        osh = opt_state_axes(paxes)
+        ostate_shapes = {
+            "m": pshapes, "v": pshapes,
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        if hyper.grad_compression:
+            osh["error"] = paxes
+            ostate_shapes["error"] = pshapes
+        osharding = _axes_shardings(osh, ostate_shapes, mesh, rules)
+        step_sh = None  # replicated scalar
+        fn = jax.jit(
+            make_train_step(cfg, hyper),
+            in_shardings=(psharding, osharding, bsharding, step_sh),
+            out_shardings=(psharding, osharding, None),
+            donate_argnums=(0, 1),
+        )
+        args = (pshapes, ostate_shapes, specs["batch"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+        return fn, args
+
+    # serving: params in serve dtype (bf16)
+    sdt = jnp.dtype(serve_dtype)
+
+    def to_serve_dtype(s):
+        return jax.ShapeDtypeStruct(
+            s.shape, sdt if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype)
+
+    pshapes_s = jax.tree.map(to_serve_dtype, pshapes)
+
+    if shape.kind == "prefill":
+        fn = jax.jit(
+            make_prefill_step(cfg, capacity=M.cache_capacity(cfg, shape.seq_len)),
+            in_shardings=(psharding, bsharding),
+        )
+        return fn, (pshapes_s, specs["batch"])
+
+    # decode
+    caxes = M.cache_axes(cfg)
+    csharding = _axes_shardings(caxes, specs["cache"], mesh, rules)
+    fn = jax.jit(
+        make_serve_step(cfg),
+        in_shardings=(psharding, bsharding, csharding),
+        donate_argnums=(2,),   # cache updated in place
+    )
+    return fn, (pshapes_s, specs["batch"], specs["cache"])

@@ -1,0 +1,336 @@
+"""LM assembly: embeddings -> scan(blocks) -> norm -> head(s), plus the
+three step functions the launcher lowers: train forward/loss, prefill,
+and single-token decode against a KV/SSM cache.
+
+Layer parameters are stacked on a leading "layer" axis and iterated with
+`jax.lax.scan` — compile time stays flat in depth (60-layer stacks lower
+in <1s) and remat policy applies per block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.activations import ActivationEngine
+from repro.parallel.partition import Boxed, box, is_boxed, unbox_tree
+from repro.parallel.partition import logical_constraint as lc
+
+from .config import ModelConfig
+from .layers import BlockIO, apply_block, apply_norm, init_block, init_norm, dtype_of
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig):
+    """Returns a Boxed(value, logical_axes) tree of all parameters."""
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    V, d, K = cfg.padded_vocab, cfg.d_model, cfg.n_codebooks
+    embed_shape = (K, V, d) if K > 1 else (V, d)
+    embed_axes = ("codebook", "vocab", "embed") if K > 1 else ("vocab", "embed")
+    params: dict[str, Any] = {
+        "embed": box(embed_axes,
+                     jax.random.normal(ks[0], embed_shape, jnp.float32) * 0.02),
+        "ln_f": init_norm(ks[1], cfg),
+        "lm_head": box(embed_axes[::-1] if K == 1 else ("codebook", "embed", "vocab"),
+                       jax.random.normal(ks[2], (K, d, V) if K > 1 else (d, V),
+                                         jnp.float32) * (1.0 / np.sqrt(d))),
+    }
+    layers = [init_block(ks[4 + i], cfg) for i in range(cfg.n_layers)]
+    params["blocks"] = jax.tree.map(
+        lambda *ls: Boxed(jnp.stack([b.value for b in ls]),
+                          ("layer",) + ls[0].axes),
+        *layers, is_leaf=is_boxed)
+    return params
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    """(shapes_tree, axes_tree) without allocating anything."""
+    side = []
+
+    def f(k):
+        vals, axes = unbox_tree(init_lm(k, cfg))
+        side.append(axes)
+        return vals
+
+    shapes = jax.eval_shape(f, jax.random.key(seed))
+    return shapes, side[0]
+
+
+def materialize_params(cfg: ModelConfig, seed: int = 0):
+    """(params, axes) with real arrays (smoke tests / examples)."""
+    return unbox_tree(init_lm(jax.random.key(seed), cfg))
+
+
+# ---------------------------------------------------------------------------
+# embeddings & heads
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: ModelConfig, patch_embeds=None):
+    cdt = dtype_of(cfg)
+    emb = params["embed"].astype(cdt)
+    if cfg.n_codebooks > 1:                      # tokens [B, S, K]
+        # musicgen-style: per-codebook embeddings summed
+        x = sum(emb[k][tokens[..., k]] for k in range(cfg.n_codebooks))
+    else:
+        x = emb[tokens]
+    if cfg.patch_embed_input and patch_embeds is not None:
+        x = x + patch_embeds.astype(cdt)
+    return lc(x, "batch", "seq", "act_embed")
+
+
+def lm_logits(params, h, cfg: ModelConfig):
+    head = params["lm_head"].astype(jnp.float32)
+    hf = h.astype(jnp.float32)
+    if cfg.n_codebooks > 1:
+        logits = jnp.einsum("bsd,kdv->bskv", hf, head)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", hf, head)
+    return lc(logits, "batch", "seq", None, "act_vocab") \
+        if cfg.n_codebooks > 1 else lc(logits, "batch", "seq", "act_vocab")
+
+
+# ---------------------------------------------------------------------------
+# stack runners
+# ---------------------------------------------------------------------------
+
+def _positions_for(batch, cfg: ModelConfig, S: int, offset=0):
+    if cfg.rope_kind == "mrope" and "mrope_positions" in batch:
+        return batch["mrope_positions"]
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :] + offset
+    if cfg.rope_kind == "mrope":
+        return jnp.broadcast_to(pos[..., None], pos.shape + (3,))
+    return pos
+
+
+def run_stack_train(params, x, batch, cfg: ModelConfig, engine: ActivationEngine,
+                    remat: str = "block"):
+    S = x.shape[1]
+    io_template = dict(
+        positions=_positions_for(batch, cfg, S),
+        q_pos=jnp.arange(S, dtype=jnp.int32),
+        k_pos=jnp.arange(S, dtype=jnp.int32),
+    )
+
+    def block_fn(x, layer_params):
+        io = BlockIO(mode="train", **io_template)
+        return apply_block(layer_params, x, io, cfg, engine)
+
+    if remat == "block":
+        block_fn = jax.checkpoint(block_fn, prevent_cse=False)
+    elif remat == "dots":
+        block_fn = jax.checkpoint(
+            block_fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.checkpoint_dots)
+
+    def scan_body(carry, layer_params):
+        x, aux = carry
+        x, _, aux_i = block_fn(x, layer_params)
+        return (x, aux + aux_i), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.float32(0.0)), params["blocks"])
+    return x, aux / cfg.n_layers
+
+
+def run_stack_prefill(params, x, batch, cfg: ModelConfig, engine, capacity: int):
+    """Returns (x, stacked cache). Cache k/v laid out ring-style when a
+    sliding window bounds capacity."""
+    B, S = x.shape[0], x.shape[1]
+    io_template = dict(
+        positions=_positions_for(batch, cfg, S),
+        q_pos=jnp.arange(S, dtype=jnp.int32),
+        k_pos=jnp.arange(S, dtype=jnp.int32),
+    )
+
+    def scan_body(x, layer_params):
+        io = BlockIO(mode="prefill", **io_template)
+        x, cache, _ = apply_block(layer_params, x, io, cfg, engine)
+        out_cache = {}
+        for name, val in cache.items():
+            if name in ("k", "v"):
+                out_cache[name] = _prefill_kv_to_cache(val, capacity, S)
+            else:
+                out_cache[name] = val
+        return x, out_cache
+
+    x, caches = jax.lax.scan(scan_body, x, params["blocks"])
+    slots = _prefill_slot_positions(capacity, S)
+    cache = {
+        "layers": caches,
+        "cur": jnp.int32(S),
+        "k_pos": slots,
+    }
+    return x, cache
+
+
+def _prefill_kv_to_cache(kv, capacity: int, S: int):
+    """[B,S,KV,hd] -> [B,W,KV,hd] ring-ordered cache of the last W tokens."""
+    W = capacity
+    if S < W:
+        return jnp.pad(kv, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+    last = kv[:, S - W:]                                   # positions S-W..S-1
+    # slot for absolute position p is p % W; positions S-W..S-1 cover every
+    # residue once -> permutation: slot j holds position p with p % W == j
+    j = jnp.arange(W)
+    i = (j - (S - W)) % W                                  # index into `last`
+    return jnp.take(last, i, axis=1)
+
+
+def _prefill_slot_positions(capacity: int, S: int):
+    W = capacity
+    j = jnp.arange(W, dtype=jnp.int32)
+    if S < W:
+        return jnp.where(j < S, j, -1)
+    return (S - W) + ((j - (S - W)) % W)
+
+
+def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
+    """One-token step. x: [B,1,d]. Returns (x, new_cache)."""
+    cur = cache["cur"]
+    k_pos_vec = cache.get("k_pos")
+    W = k_pos_vec.shape[0] if k_pos_vec is not None else 0
+    slot = (cur % W).astype(jnp.int32) if W else jnp.int32(0)
+
+    if cfg.rope_kind == "mrope" and "mrope_positions" in batch:
+        positions = batch["mrope_positions"]
+    else:
+        positions = jnp.reshape(cur, (1, 1)).astype(jnp.int32)
+        if cfg.rope_kind == "mrope":
+            positions = jnp.broadcast_to(positions[..., None], (1, 1, 3))
+
+    if k_pos_vec is not None:
+        k_pos_new = jnp.where(jnp.arange(W) == slot, cur, k_pos_vec)
+    else:
+        k_pos_new = None
+
+    def scan_body(x, inp):
+        layer_params, layer_cache = inp
+        lcache = dict(layer_cache)
+        lcache["slot"] = slot
+        io = BlockIO(mode="decode", positions=positions, q_pos=cur,
+                     k_pos=k_pos_new, cache=lcache)
+        x, new_cache, _ = apply_block(layer_params, x, io, cfg, engine)
+        # preserve untouched entries (e.g. nothing for pure attn)
+        merged = {k: new_cache.get(k, v) for k, v in layer_cache.items()}
+        return x, merged
+
+    x, new_layer_caches = jax.lax.scan(
+        scan_body, x, (params["blocks"], cache["layers"]))
+    new_cache = {"layers": new_layer_caches, "cur": cur + 1}
+    if k_pos_new is not None:
+        new_cache["k_pos"] = k_pos_new
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache construction (shapes for dry-run / serving)
+# ---------------------------------------------------------------------------
+
+def cache_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    """ShapeDtypeStruct tree describing the cache at a given fill level."""
+    cdt = dtype or jnp.dtype(cfg.compute_dtype)
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim_
+    W = cache_capacity(cfg, seq_len)
+    layers: dict[str, Any] = {}
+    sds = jax.ShapeDtypeStruct
+    if cfg.has_attention or cfg.parallel_mamba:
+        layers["k"] = sds((L, batch, W, KV, hd), cdt)
+        layers["v"] = sds((L, batch, W, KV, hd), cdt)
+    if cfg.use_mamba or cfg.parallel_mamba:
+        layers["conv"] = sds((L, batch, cfg.conv_kernel - 1, cfg.d_inner_), cdt)
+        layers["ssm"] = sds((L, batch, cfg.d_inner_, cfg.ssm_state), jnp.float32)
+    spec = {"layers": layers, "cur": sds((), jnp.int32)}
+    if cfg.has_attention or cfg.parallel_mamba:
+        spec["k_pos"] = sds((W,), jnp.int32)
+    return spec
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes tree matching cache_spec (for shardings)."""
+    layers: dict[str, Any] = {}
+    if cfg.has_attention or cfg.parallel_mamba:
+        layers["k"] = ("layer", "batch", "seq", "act_kv", None)
+        layers["v"] = ("layer", "batch", "seq", "act_kv", None)
+    if cfg.use_mamba or cfg.parallel_mamba:
+        layers["conv"] = ("layer", "batch", None, "act_dinner")
+        layers["ssm"] = ("layer", "batch", "act_dinner", None)
+    axes = {"layers": layers, "cur": ()}
+    if cfg.has_attention or cfg.parallel_mamba:
+        axes["k_pos"] = (None,)
+    return axes
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """Zero-filled cache (serving from scratch)."""
+    spec = cache_spec(cfg, batch, seq_len)
+
+    def zero(s):
+        z = jnp.zeros(s.shape, s.dtype)
+        return z
+
+    cache = jax.tree.map(zero, spec)
+    cache["cur"] = jnp.int32(0)
+    if "k_pos" in cache:
+        cache["k_pos"] = jnp.full(spec["k_pos"].shape, -1, jnp.int32)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# step functions (lowered by the launcher)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch, cfg: ModelConfig, engine: ActivationEngine,
+            remat: str = "block", z_loss: float = 1e-4):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = embed_tokens(params, tokens, cfg, batch.get("patch_embeds"))
+    x, aux = run_stack_train(params, x, batch, cfg, engine, remat)
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = lm_logits(params, x, cfg)                     # f32
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    nll = (lse - ll).mean()
+    total = nll + aux + z_loss * (lse ** 2).mean()
+    return total, {"nll": nll, "aux": aux}
+
+
+def forward_fn(params, batch, cfg: ModelConfig, engine: ActivationEngine):
+    """Full-sequence logits, no cache (tests / evaluation)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg, batch.get("patch_embeds"))
+    x, _ = run_stack_train(params, x, batch, cfg, engine, remat="none")
+    x = apply_norm(params["ln_f"], x, cfg)
+    return lm_logits(params, x, cfg)
+
+
+def prefill_fn(params, batch, cfg: ModelConfig, engine: ActivationEngine,
+               capacity: int | None = None):
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    capacity = capacity or cache_capacity(cfg, S)
+    x = embed_tokens(params, tokens, cfg, batch.get("patch_embeds"))
+    x, cache = run_stack_prefill(params, x, batch, cfg, engine, capacity)
+    x = apply_norm(params["ln_f"], x, cfg)
+    last = x[:, -1:]
+    logits = lm_logits(params, last, cfg)[:, 0]
+    return logits, cache
+
+
+def decode_fn(params, batch, cache, cfg: ModelConfig, engine: ActivationEngine):
+    tokens = batch["tokens"]                               # [B, 1(,K)]
+    x = embed_tokens(params, tokens, cfg, batch.get("patch_embeds"))
+    x, cache = run_stack_decode(params, x, batch, cfg, engine, cache)
+    x = apply_norm(params["ln_f"], x, cfg)
+    logits = lm_logits(params, x, cfg)[:, 0]
+    return logits, cache

@@ -1,0 +1,39 @@
+"""Int8 error-feedback gradient compression (1-bit-Adam-family trick).
+
+Quantizes each gradient leaf to int8 with a per-leaf scale before the
+optimizer sees it; the quantization residual is carried in an error
+buffer and added back next step, so the compression bias telescopes away
+(convergence property tested in tests/test_optim.py).
+
+On a real multislice deployment this models compressing the slow
+pod-axis (DCN) all-reduce: grads are reduced intra-slice in bf16/f32,
+quantized to int8 for the cross-slice hop (4x DCN bytes saved vs f32),
+and error feedback keeps Adam unbiased. The §Perf hillclimb quantifies
+the collective-term saving for the most DCN-bound cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def _quantize_leaf(g, err):
+    """g + err -> (int8 payload dequantized, new error)."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(gf / scale), -127, 127)
+    deq = q * scale
+    return deq.astype(g.dtype), gf - deq
+
+
+def compress_grads(grads, error):
+    """Returns (compressed grads, new error buffers)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error)
+    out = [_quantize_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))

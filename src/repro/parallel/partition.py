@@ -1,0 +1,189 @@
+"""Logical-axis partitioning (MaxText-style rule table).
+
+Every parameter and annotated activation carries a tuple of *logical*
+axis names ("embed", "mlp", "heads", ...). A rule table maps each
+logical axis to an ordered list of candidate mesh axes; resolution picks
+the first candidate whose size divides the dimension (jit *inputs*
+require even division — verified empirically on jax 0.8.2; intermediates
+tolerate uneven sharding, so activation constraints may relax the check).
+
+Model code never mentions mesh axes — swapping TP/FSDP/EP layouts is a
+rule-table edit, which is what the §Perf hillclimb iterates on.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, NamedTuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class Boxed(NamedTuple):
+    """A parameter value bundled with its logical axis names."""
+    value: Any
+    axes: tuple
+
+
+def box(axes: tuple, value):
+    assert len(axes) == getattr(value, "ndim", len(axes)), (axes, value.shape)
+    return Boxed(value, axes)
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def unbox_tree(tree):
+    """Split a tree of Boxed leaves into (values_tree, axes_tree)."""
+    values = jax.tree.map(lambda b: b.value, tree, is_leaf=is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_boxed)
+    return values, axes
+
+
+# Default rule table: TP over "model", FSDP over "data", DP batch over
+# ("pod", "data"). Order within a candidate list = priority.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # weight dims
+    "embed":    ("data",),            # FSDP: gathered at use
+    "mlp":      ("model",),           # TP column/row
+    "heads":    ("model",),
+    "kv":       ("model",),
+    "head_dim": (),
+    "vocab":    ("model",),
+    "expert":   ("data", "model"),    # EP: expert dim over whichever divides
+    "dinner":   ("model",),           # mamba inner dim
+    "state":    (),
+    "conv":     (),
+    "dt":       (),
+    "codebook": (),
+    "layer":    (),                   # scan axis: never sharded
+    # activation dims
+    "batch":    (("pod", "data"), "data"),  # tuple candidate = use together;
+                                            # plain "data" covers single-pod
+                                            # meshes (no "pod" axis)
+    "seq":      (),
+    "cache_seq": ("model",),          # KV-cache sequence dim (decode/prefill)
+    "act_heads": ("model",),
+    "act_kv":   ("model",),
+    "act_mlp":  ("model",),
+    "act_dinner": ("model",),
+    "act_embed": (),
+    "act_vocab": ("model",),
+    "act_expert": (),
+}
+
+
+@dataclasses.dataclass
+class MeshContext:
+    mesh: Mesh | None
+    rules: dict[str, tuple]
+
+
+_ctx = threading.local()
+
+
+def _get_ctx() -> MeshContext:
+    return getattr(_ctx, "value", MeshContext(None, DEFAULT_RULES))
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh | None, rules: dict[str, tuple] | None = None,
+               overrides: dict[str, tuple] | None = None):
+    """Install the (mesh, rules) context used by logical_constraint and
+    make_sharding. ``overrides`` patches individual logical axes."""
+    merged = dict(DEFAULT_RULES if rules is None else rules)
+    if overrides:
+        merged.update(overrides)
+    old = getattr(_ctx, "value", None)
+    _ctx.value = MeshContext(mesh, merged)
+    try:
+        yield _ctx.value
+    finally:
+        if old is None:
+            del _ctx.value
+        else:
+            _ctx.value = old
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def resolve_spec(axes: tuple, shape: tuple | None = None, *,
+                 strict: bool = True,
+                 mesh: Mesh | None = None,
+                 rules: dict | None = None) -> P:
+    """Logical axes tuple -> PartitionSpec under the active rule table.
+
+    strict=True (params / jit inputs): a candidate mesh axis is used only
+    if it divides the dim evenly; otherwise try the next candidate, else
+    replicate. strict=False (activation constraints): first candidate
+    whose axes exist wins, divisibility not required (GSPMD pads).
+    """
+    ctx = _get_ctx()
+    mesh = mesh or ctx.mesh
+    rules = rules or ctx.rules
+    if mesh is None:
+        return P()
+    used: set = set()
+    parts = []
+    for i, name in enumerate(axes):
+        cands = rules.get(name, ()) if name is not None else ()
+        chosen = None
+        for cand in cands:
+            flat = cand if isinstance(cand, tuple) else (cand,)
+            if any(a not in mesh.shape for a in flat):
+                continue
+            if any(a in used for a in flat):
+                continue
+            if strict and shape is not None:
+                if shape[i] % _mesh_axis_size(mesh, cand) != 0:
+                    continue
+            chosen = cand
+            break
+        if chosen is not None:
+            flat = chosen if isinstance(chosen, tuple) else (chosen,)
+            used.update(flat)
+        parts.append(chosen)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def make_sharding(axes: tuple, shape: tuple | None = None, *, strict=True,
+                  mesh: Mesh | None = None, rules: dict | None = None):
+    ctx = _get_ctx()
+    mesh = mesh or ctx.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(axes, shape, strict=strict,
+                                            mesh=mesh, rules=rules))
+
+
+def logical_constraint(x, *axes):
+    """with_sharding_constraint by logical names; no-op without a mesh.
+    Uneven dims are fine here (intermediate values)."""
+    ctx = _get_ctx()
+    if ctx.mesh is None:
+        return x
+    spec = resolve_spec(axes, None, strict=False, mesh=ctx.mesh, rules=ctx.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def tree_shardings(axes_tree, shapes_tree, *, mesh=None, rules=None):
+    """Shardings for a whole param tree (strict: these feed jit in_shardings)."""
+    return jax.tree.map(
+        lambda axes, shp: make_sharding(axes, tuple(shp.shape), strict=True,
+                                        mesh=mesh, rules=rules),
+        axes_tree, shapes_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t),
+    )

@@ -1,0 +1,191 @@
+"""Core paper reproduction: CR spline, fixed point, paper Tables I/II."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Q2_13,
+    basis_weights,
+    build_fixed_table,
+    build_table,
+    interpolate,
+    interpolate_fixed,
+    interpolate_pwl,
+    quantize,
+    dequantize,
+    representable_grid,
+    table_1_2,
+    tanh_error,
+    PAPER_TABLE_1_2,
+)
+from repro.core.fixed_point import fx_add, fx_mul, sat
+
+
+# ----------------------------------------------------------------------
+# fixed point
+# ----------------------------------------------------------------------
+
+class TestFixedPoint:
+    def test_grid_size(self):
+        g = representable_grid(Q2_13)
+        assert g.size == 2 ** 16
+        assert g.min() == -4.0
+        assert g.max() == 4.0 - 2.0 ** -13
+
+    @given(st.floats(min_value=-3.999, max_value=3.999))
+    @settings(max_examples=200, deadline=None)
+    def test_quantize_roundtrip_error(self, x):
+        q = quantize(np.float64(x))
+        y = float(dequantize(q))
+        assert abs(y - x) <= 2.0 ** -14 + 1e-12  # half LSB
+
+    @given(st.floats(min_value=-16.0, max_value=16.0))
+    @settings(max_examples=100, deadline=None)
+    def test_quantize_saturates(self, x):
+        q = int(quantize(np.float64(x)))
+        assert Q2_13.min_int <= q <= Q2_13.max_int
+
+    @given(st.integers(min_value=-(2 ** 15), max_value=2 ** 15 - 1),
+           st.integers(min_value=-(2 ** 15), max_value=2 ** 15 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_fx_mul_matches_float_within_lsb(self, a, b):
+        fa, fb = a / Q2_13.scale, b / Q2_13.scale
+        prod = float(dequantize(fx_mul(jnp.int32(a), jnp.int32(b), rounding="nearest")))
+        if abs(fa * fb) < 3.999:  # away from saturation
+            assert abs(prod - fa * fb) <= 2.0 ** -13
+
+    def test_fx_add_saturates(self):
+        big = jnp.int32(Q2_13.max_int)
+        assert int(fx_add(big, big)) == Q2_13.max_int
+        small = jnp.int32(Q2_13.min_int)
+        assert int(fx_add(small, small)) == Q2_13.min_int
+
+
+# ----------------------------------------------------------------------
+# CR spline properties
+# ----------------------------------------------------------------------
+
+class TestSplineProperties:
+    @pytest.fixture(autouse=True)
+    def _x64(self):
+        old = jax.config.jax_enable_x64
+        jax.config.update("jax_enable_x64", True)
+        yield
+        jax.config.update("jax_enable_x64", old)
+
+    def test_basis_partition_of_unity(self):
+        # sum of CR basis weights == 1 for all t (affine invariance)
+        t = jnp.linspace(0.0, 1.0, 1001)
+        w = basis_weights(t)
+        np.testing.assert_allclose(np.asarray(jnp.sum(w, axis=-1)), 1.0, atol=1e-6)
+
+    def test_interpolates_knots(self):
+        tab = build_table(np.tanh, 4.0, 32)
+        xs = np.arange(32) * tab.period
+        y = np.asarray(interpolate(tab, jnp.asarray(xs, jnp.float64)))
+        np.testing.assert_allclose(y, np.tanh(xs), atol=1e-12)
+
+    def test_linear_precision(self):
+        # CR reproduces linear functions exactly (cubic precision >= 1)
+        tab = build_table(lambda x: 0.5 * x + 0.0, 4.0, 16)
+        xs = np.linspace(0, 3.9, 1000)
+        y = np.asarray(interpolate(tab, jnp.asarray(xs, jnp.float64), odd=False))
+        np.testing.assert_allclose(y, 0.5 * xs, atol=1e-12)
+
+    def test_cubic_not_exact_but_close(self):
+        tab = build_table(lambda x: x ** 3 / 64.0, 4.0, 32)
+        xs = np.linspace(0, 3.9, 1000)
+        y = np.asarray(interpolate(tab, jnp.asarray(xs, jnp.float64), odd=False))
+        assert np.max(np.abs(y - xs ** 3 / 64.0)) < 1e-3
+
+    @given(st.floats(min_value=-8.0, max_value=8.0))
+    @settings(max_examples=300, deadline=None)
+    def test_odd_symmetry(self, x):
+        tab = build_table(np.tanh, 4.0, 32)
+        yp = float(interpolate(tab, jnp.float64(x)))
+        yn = float(interpolate(tab, jnp.float64(-x)))
+        assert yp == pytest.approx(-yn, abs=1e-12)
+
+    @given(st.floats(min_value=-10.0, max_value=10.0))
+    @settings(max_examples=300, deadline=None)
+    def test_range_bound(self, x):
+        tab = build_table(np.tanh, 4.0, 32)
+        y = float(interpolate(tab, jnp.float64(x)))
+        assert abs(y) <= 1.0  # tanh CR stays inside [-1, 1] (monotone knots)
+
+    def test_c1_continuity_at_knots(self):
+        # numeric derivative from left and right of each interior knot
+        tab = build_table(np.tanh, 4.0, 32)
+        eps = 1e-6
+        ks = np.arange(1, 31) * tab.period
+        f = lambda v: np.asarray(interpolate(tab, jnp.asarray(v, jnp.float64)))
+        dl = (f(ks - eps) - f(ks - 2 * eps)) / eps
+        dr = (f(ks + 2 * eps) - f(ks + eps)) / eps
+        np.testing.assert_allclose(dl, dr, atol=1e-4)
+
+    def test_saturation(self):
+        tab = build_table(np.tanh, 4.0, 32)
+        y = np.asarray(interpolate(tab, jnp.asarray([4.0, 5.0, 100.0, -4.0, -77.0], jnp.float64)))
+        np.testing.assert_allclose(y[:3], np.tanh(4.0), atol=1e-12)
+        np.testing.assert_allclose(y[3:], -np.tanh(4.0), atol=1e-12)
+
+    def test_gradient_flows(self):
+        tab = build_table(np.tanh, 4.0, 32)
+        g = jax.grad(lambda x: interpolate(tab, x))(jnp.float32(0.7))
+        exact = 1.0 - np.tanh(0.7) ** 2
+        assert abs(float(g) - exact) < 1e-3
+
+
+# ----------------------------------------------------------------------
+# paper Tables I / II
+# ----------------------------------------------------------------------
+
+@pytest.mark.x64
+class TestPaperTables:
+    @pytest.fixture(autouse=True)
+    def _x64(self):
+        old = jax.config.jax_enable_x64
+        jax.config.update("jax_enable_x64", True)
+        yield
+        jax.config.update("jax_enable_x64", old)
+
+    def test_tables_1_2_reproduce(self):
+        rows = table_1_2("qout")
+        for r in rows:
+            p = r["paper"]
+            # RMS entries reproduce to ~1% (published 6 decimals)
+            assert r["pwl_rms"] == pytest.approx(p["pwl_rms"], rel=0.01)
+            assert r["cr_rms"] == pytest.approx(p["cr_rms"], rel=0.02)
+            # max errors to ~2%
+            assert r["pwl_max"] == pytest.approx(p["pwl_max"], rel=0.02)
+            assert r["cr_max"] == pytest.approx(p["cr_max"], rel=0.02)
+
+    def test_flagship_config_exact_digits(self):
+        # the shipped configuration (depth 32, period 0.125)
+        s_cr = tanh_error("cr", 32, datapath="qout")
+        assert round(s_cr.rms, 6) == 0.000052
+        assert round(s_cr.max, 6) == 0.000152
+        s_pwl = tanh_error("pwl", 32, datapath="qout")
+        assert round(s_pwl.rms, 6) == 0.000523
+        assert round(s_pwl.max, 6) == 0.001584
+
+    def test_accuracy_gain_over_pwl(self):
+        for period, ref in PAPER_TABLE_1_2.items():
+            cr_s = tanh_error("cr", ref["depth"], datapath="qout")
+            pwl_s = tanh_error("pwl", ref["depth"], datapath="qout")
+            assert cr_s.rms < pwl_s.rms  # CR strictly better everywhere
+
+    def test_fixed_datapath_close_to_qout(self):
+        # full Fig.3 bit-accurate circuit: within ~2 LSB of the table pipeline
+        s = tanh_error("cr", 32, datapath="fixed")
+        assert s.rms < 1e-4
+        assert s.max < 4 * 2.0 ** -13
+
+    def test_fixed_matches_its_own_lattice_determinism(self):
+        ftab = build_fixed_table(np.tanh, 4.0, 32)
+        xq = quantize(jnp.asarray(np.linspace(-4, 3.999, 4096), jnp.float32))
+        y1 = np.asarray(interpolate_fixed(ftab, xq))
+        y2 = np.asarray(interpolate_fixed(ftab, xq))
+        np.testing.assert_array_equal(y1, y2)

@@ -1,0 +1,85 @@
+"""Data pipeline invariants: determinism, shift, host sharding, structure."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.data import DataConfig, SyntheticPipeline
+
+
+def _pipe(arch="olmo-1b", gb=8, seq=32, seed=0, **kw):
+    cfg = registry.get(arch, smoke=True)
+    return SyntheticPipeline(cfg, DataConfig(seed=seed, vocab_size=512),
+                             gb, seq, **kw)
+
+
+def test_deterministic_across_instances():
+    a, b = _pipe(seed=3), _pipe(seed=3)
+    for step in (0, 7, 1000):
+        ba, bb = a(step), b(step)
+        for k in ba:
+            np.testing.assert_array_equal(ba[k], bb[k])
+
+
+def test_different_steps_differ():
+    p = _pipe()
+    assert not np.array_equal(p(0)["tokens"], p(1)["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    b = _pipe()(5)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_host_sharding_partitions_global_batch():
+    """2 hosts x 4 rows == rows of the 8-row single-host batch."""
+    whole = _pipe(gb=8)(11)["tokens"]
+    h0 = _pipe(gb=8, host_id=0, host_count=2)(11)["tokens"]
+    h1 = _pipe(gb=8, host_id=1, host_count=2)(11)["tokens"]
+    assert h0.shape[0] == h1.shape[0] == 4
+    # hosts never generate identical rows (independent PRNG folds)
+    assert not np.array_equal(h0, h1)
+
+
+def test_vlm_batch_has_mrope_and_patches():
+    b = _pipe("qwen2-vl-2b", gb=4, seq=16)(0)
+    assert b["mrope_positions"].shape == (4, 16, 3)
+    assert b["patch_embeds"].shape[-1] == registry.get(
+        "qwen2-vl-2b", smoke=True).d_model
+
+
+def test_audio_batch_multi_codebook():
+    cfg = registry.get("musicgen-large", smoke=True)
+    p = SyntheticPipeline(cfg, DataConfig(vocab_size=256), 4, 16)
+    b = p(0)
+    assert b["tokens"].shape == (4, 16, cfg.n_codebooks)
+
+
+def test_indivisible_host_count_rejected():
+    with pytest.raises(ValueError):
+        _pipe(gb=8, host_count=3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 20), step=st.integers(0, 2 ** 20))
+def test_tokens_in_vocab_range_property(seed, step):
+    p = _pipe(seed=seed, gb=2, seq=16)
+    t = np.asarray(p(step)["tokens"])
+    assert t.min() >= 0 and t.max() < 512
+
+
+def test_data_is_learnable_structure():
+    """Markov/copy/progression rows must be predictable: consecutive
+    tokens correlate far above iid-uniform chance."""
+    b = np.asarray(_pipe(gb=64, seq=64)(0)["tokens"])
+    # for each row, look for exact self-similarity at ANY lag <= 32:
+    # copy rows repeat at their period, progressions at V/gcd wraps
+    hit = 0
+    for row in b:
+        for lag in range(1, 33):
+            if (row[lag:] == row[:-lag]).mean() > 0.5:
+                hit += 1
+                break
+    # copy rows are ~30% of the mixture; periods are uniform in [4, 64)
+    # so roughly half have a full repeat within lag 32
+    assert hit >= 0.05 * len(b), hit

@@ -1,0 +1,98 @@
+"""Fault-tolerance driver: preemption/resume determinism, NaN skip +
+rollback, straggler watchdog. Uses a synthetic scalar 'model' so each
+test runs in milliseconds; the real-model resume test lives in
+test_system.py."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ft import FTConfig, SimulatedPreemption, TrainDriver
+
+
+class FakePipeline:
+    """batch(step) = the step index (deterministic, trivially resumable)."""
+
+    def __call__(self, step):
+        return jnp.float32(step)
+
+    def state(self, step):
+        return {"step": int(step)}
+
+
+def make_step(poison_steps=(), slow_steps=(), sleep_s=0.05):
+    """params' = params + batch; loss = params. Poisoned steps produce a
+    non-finite gradient norm (models a bad microbatch)."""
+
+    def step_fn(params, opt_state, batch, step):
+        s = int(step)
+        if s in slow_steps:
+            time.sleep(sleep_s)
+        bad = s in poison_steps
+        gnorm = jnp.float32(np.nan) if bad else jnp.float32(1.0)
+        loss = jnp.float32(np.nan) if bad else params
+        new_params = params if bad else params + batch
+        skipped = jnp.int32(1 if bad else 0)
+        return new_params, opt_state, {
+            "loss": loss, "gnorm": gnorm, "skipped": skipped}
+
+    return step_fn
+
+
+def drv(tmp_path, step_fn, **ft_kw):
+    ft = FTConfig(ckpt_dir=str(tmp_path), log_every=0, **ft_kw)
+    return TrainDriver(step_fn, FakePipeline(), jnp.float32(0.0), {}, ft,
+                       log=lambda *_: None)
+
+
+def test_preemption_and_resume_identical(tmp_path):
+    ref = drv(tmp_path / "a", make_step(), ckpt_every=4)
+    ref.run(10)
+    ref_final = float(ref.params)
+
+    d1 = drv(tmp_path / "b", make_step(), ckpt_every=4)
+    with pytest.raises(SimulatedPreemption):
+        d1.run(10, preempt_at={6})
+    d2 = TrainDriver.resume(make_step(), FakePipeline(), jnp.float32(0.0), {},
+                            FTConfig(ckpt_dir=str(tmp_path / "b"),
+                                     log_every=0, ckpt_every=4),
+                            log=lambda *_: None)
+    assert d2.step == 6
+    d2.run(4)
+    assert float(d2.params) == ref_final
+
+
+def test_nan_step_skipped_params_protected(tmp_path):
+    d = drv(tmp_path, make_step(poison_steps={3}), ckpt_every=100)
+    d.run(6)
+    # sum of batches 0..5 minus the skipped step-3 batch... the skipped
+    # step advances the index but not the params
+    assert float(d.params) == sum((0, 1, 2, 4, 5))
+    assert sum(r.skipped for r in d.history) == 1
+
+
+def test_consecutive_nans_trigger_rollback(tmp_path):
+    d = drv(tmp_path, make_step(poison_steps={4, 5, 6, 7, 8}),
+            ckpt_every=2, rollback_after=3, max_rollbacks=1)
+    d.run(7)  # 3 consecutive skips at step 6 -> one rollback to step 4;
+    # data is persistently bad so the bounded driver then skips onward
+    assert sum(r.rolled_back for r in d.history) == 1
+    assert float(d.params) == sum((0, 1, 2, 3))
+
+
+def test_straggler_detected(tmp_path):
+    seen = []
+    ft = FTConfig(ckpt_dir=str(tmp_path), log_every=0,
+                  straggler_factor=5.0, ckpt_every=100)
+    d = TrainDriver(make_step(slow_steps={12}, sleep_s=0.25), FakePipeline(),
+                    jnp.float32(0.0), {}, ft, log=lambda *_: None,
+                    on_straggler=seen.append)
+    d.run(14)
+    assert [r.step for r in seen] == [12]
+
+
+def test_checkpoint_cadence(tmp_path):
+    d = drv(tmp_path, make_step(), ckpt_every=5)
+    d.run(12)
+    assert d.store.steps() == [5, 10]

@@ -1,0 +1,114 @@
+"""Calibration tests for the trip-count-aware HLO cost analysis.
+
+The whole roofline rests on this parser, so it is tested against ground
+truth XLA behaviour: scanned and unrolled versions of the same program
+must report the SAME flops (XLA's own cost_analysis fails this — that is
+the reason hlo_cost exists), and collectives inside scans must multiply
+by trip count.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo_cost
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+M = 256
+SPEC = jax.ShapeDtypeStruct((M, M), jnp.float32)
+MATMUL_FLOPS = 2 * M ** 3
+
+
+def test_single_matmul_flops_match_xla():
+    c = _compile(lambda x, w: x @ w, SPEC, SPEC)
+    t = hlo_cost.analyze_compiled(c)
+    assert t.flops == pytest.approx(MATMUL_FLOPS, rel=0.01)
+    xla = c.cost_analysis()["flops"]
+    assert t.flops == pytest.approx(xla, rel=0.05)
+
+
+def test_scan_flops_equal_unrolled():
+    def scanned(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=6)
+        return y
+
+    def unrolled(x, w):
+        for _ in range(6):
+            x = x @ w
+        return x
+
+    t_scan = hlo_cost.analyze_compiled(_compile(scanned, SPEC, SPEC))
+    t_unroll = hlo_cost.analyze_compiled(_compile(unrolled, SPEC, SPEC))
+    assert t_scan.flops == pytest.approx(6 * MATMUL_FLOPS, rel=0.02)
+    assert t_scan.flops == pytest.approx(t_unroll.flops, rel=0.02)
+    # the raw XLA number is 6x off — this is the bug we correct
+    xla = _compile(scanned, SPEC, SPEC).cost_analysis()["flops"]
+    assert xla == pytest.approx(MATMUL_FLOPS, rel=0.02)
+
+
+def test_nested_scan_multiplies():
+    def nested(x, w):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ w, None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    t = hlo_cost.analyze_compiled(_compile(nested, SPEC, SPEC))
+    assert t.flops == pytest.approx(12 * MATMUL_FLOPS, rel=0.05)
+
+
+def test_scan_bytes_scale_with_trips():
+    def scanned(n):
+        def fn(x, w):
+            def body(c, _):
+                return c @ w, None
+            y, _ = jax.lax.scan(body, x, None, length=n)
+            return y
+        return fn
+
+    b2 = hlo_cost.analyze_compiled(_compile(scanned(2), SPEC, SPEC)).bytes
+    b8 = hlo_cost.analyze_compiled(_compile(scanned(8), SPEC, SPEC)).bytes
+    # bytes should grow ~4x going 2 -> 8 iterations (fixed entry overhead)
+    assert 2.5 < b8 / b2 < 4.5
+
+
+def test_elementwise_and_reduce_counted():
+    def fn(x):
+        return jnp.sum(jnp.tanh(x) * x)
+
+    t = hlo_cost.analyze_compiled(_compile(fn, SPEC))
+    n = M * M
+    # tanh + mul + reduce >= 3n flops-ish (fusion keeps them all)
+    assert t.flops >= 2 * n
+    assert t.transcendentals >= n * 0.9
+
+
+def test_tuple_shape_with_index_comments_parses():
+    # regression: /*index=5*/ comments inside tuple shapes broke the
+    # instruction regex and silently dropped the layer-scan while op
+    line = ("  %while.415 = (s32[], bf16[16,4096,1024]{2,1,0}, "
+            "/*index=5*/f32[28,128]{1,0}) while(%tuple.1), "
+            "condition=%cond.1, body=%body.1, "
+            'backend_config={"known_trip_count":{"n":"28"}}')
+    m = hlo_cost._INSTR_RE.match(line)
+    assert m is not None
+    assert m.group(3) == "while"
+    assert hlo_cost._TRIP_RE.search(line).group(1) == "28"
+
+
+def test_dot_contracted_dim_from_lhs_operand():
+    # k=512 contraction with m=n=128 output: flops must use k from the
+    # operand shape, not the output shape
+    a = jax.ShapeDtypeStruct((128, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    t = hlo_cost.analyze_compiled(_compile(lambda x, w: x @ w, a, b))
+    assert t.flops == pytest.approx(2 * 128 * 128 * 512, rel=0.01)

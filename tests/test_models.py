@@ -1,0 +1,208 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step
+on CPU asserting output shapes + no NaNs, plus decode-vs-forward
+consistency (the cache-correctness oracle) and gradient sanity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.activations import ActivationEngine
+from repro.models import model as M
+
+ARCHS = registry.assigned_archs() + ["paper_tanh"]
+
+
+def make_batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.RandomState(seed)
+    shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+    batch = {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, shape), jnp.int32),
+        "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, shape), jnp.int32),
+    }
+    if cfg.rope_kind == "mrope":
+        batch["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, :, None], (B, S, 3))
+    if cfg.patch_embed_input:
+        batch["patch_embeds"] = jnp.asarray(
+            rng.uniform(-0.02, 0.02, (B, S, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def setups():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = registry.get(arch, smoke=True)
+            params, axes = M.materialize_params(cfg)
+            cache[arch] = (cfg, params, axes, ActivationEngine(cfg.activation))
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestSmoke:
+    def test_train_step_shapes_no_nan(self, setups, arch):
+        cfg, params, _, eng = setups(arch)
+        batch = make_batch(cfg)
+        loss, metrics = M.loss_fn(params, batch, cfg, eng)
+        assert np.isfinite(float(loss))
+        assert np.isfinite(float(metrics["nll"]))
+
+    def test_grad_step_finite(self, setups, arch):
+        cfg, params, _, eng = setups(arch)
+        batch = make_batch(cfg, B=1, S=16)
+        grads = jax.grad(lambda p: M.loss_fn(p, batch, cfg, eng)[0])(params)
+        leaves = jax.tree.leaves(grads)
+        assert leaves
+        assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves)
+        # at least the embedding grads are nonzero
+        assert float(jnp.abs(grads["embed"]).sum()) > 0
+
+    def test_forward_logits_shape(self, setups, arch):
+        cfg, params, _, eng = setups(arch)
+        B, S = 2, 32
+        batch = make_batch(cfg, B, S)
+        logits = M.forward_fn(params, batch, cfg, eng)
+        V = cfg.padded_vocab
+        want = (B, S, cfg.n_codebooks, V) if cfg.n_codebooks > 1 else (B, S, V)
+        assert logits.shape == want
+        assert not bool(jnp.any(jnp.isnan(logits)))
+
+    def test_decode_matches_forward(self, setups, arch):
+        """Teacher-forcing equivalence: prefill S-1 tokens then decode the
+        last token == full forward at the last position. Exercises RoPE
+        offsets, cache writes, ring buffers, SSM/conv state carry."""
+        cfg, params, _, eng = setups(arch)
+        B, S = 2, 24
+        batch = make_batch(cfg, B, S, seed=3)
+        full = M.forward_fn(params, batch, cfg, eng)          # [B,S,(K,)V]
+
+        pre_batch = dict(batch)
+        pre_batch["tokens"] = batch["tokens"][:, : S - 1]
+        if "mrope_positions" in batch:
+            pre_batch["mrope_positions"] = batch["mrope_positions"][:, : S - 1]
+        if "patch_embeds" in batch:
+            pre_batch["patch_embeds"] = batch["patch_embeds"][:, : S - 1]
+        cap = M.cache_capacity(cfg, S) if cfg.sliding_window else S
+        _, cache = M.prefill_fn(params, pre_batch, cfg, eng, capacity=cap)
+
+        dec_batch = {"tokens": batch["tokens"][:, S - 1: S]}
+        if "mrope_positions" in batch:
+            dec_batch["mrope_positions"] = batch["mrope_positions"][:, S - 1: S]
+        if "patch_embeds" in batch:
+            dec_batch["patch_embeds"] = batch["patch_embeds"][:, S - 1: S]
+        logits, cache = M.decode_fn(params, dec_batch, cache, cfg, eng)
+
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32),
+            np.asarray(full[:, -1], np.float32), rtol=2e-2, atol=2e-2)
+        assert int(cache["cur"]) == S
+
+    def test_multi_step_decode_consistent(self, setups, arch):
+        """Decode 4 tokens one at a time vs the full forward pass."""
+        cfg, params, _, eng = setups(arch)
+        B, S, D = 1, 20, 4
+        batch = make_batch(cfg, B, S, seed=5)
+        full = M.forward_fn(params, batch, cfg, eng)
+
+        pre_batch = dict(batch)
+        pre_batch["tokens"] = batch["tokens"][:, : S - D]
+        if "mrope_positions" in batch:
+            pre_batch["mrope_positions"] = batch["mrope_positions"][:, : S - D]
+        if "patch_embeds" in batch:
+            pre_batch["patch_embeds"] = batch["patch_embeds"][:, : S - D]
+        cap = M.cache_capacity(cfg, S) if cfg.sliding_window else S
+        _, cache = M.prefill_fn(params, pre_batch, cfg, eng, capacity=cap)
+
+        for i in range(S - D, S):
+            dec_batch = {"tokens": batch["tokens"][:, i: i + 1]}
+            if "mrope_positions" in batch:
+                dec_batch["mrope_positions"] = batch["mrope_positions"][:, i: i + 1]
+            if "patch_embeds" in batch:
+                dec_batch["patch_embeds"] = batch["patch_embeds"][:, i: i + 1]
+            logits, cache = M.decode_fn(params, dec_batch, cache, cfg, eng)
+            np.testing.assert_allclose(
+                np.asarray(logits, np.float32),
+                np.asarray(full[:, i], np.float32), rtol=2e-2, atol=2e-2,
+                err_msg=f"{arch} step {i}")
+
+
+class TestSlidingWindowRing:
+    def test_ring_decode_matches_forward_beyond_window(self):
+        """mixtral-smoke has window 32; decode past the window and compare
+        against the windowed full forward — validates the ring buffer."""
+        cfg = registry.get("mixtral-8x22b", smoke=True)
+        assert cfg.sliding_window == 32
+        params, _ = M.materialize_params(cfg)
+        eng = ActivationEngine(cfg.activation)
+        B, S = 1, 48  # exceeds the window
+        batch = make_batch(cfg, B, S, seed=7)
+        full = M.forward_fn(params, batch, cfg, eng)
+
+        pre = {"tokens": batch["tokens"][:, : S - 1]}
+        _, cache = M.prefill_fn(params, pre, cfg, eng)
+        dec = {"tokens": batch["tokens"][:, S - 1: S]}
+        logits, _ = M.decode_fn(params, dec, cache, cfg, eng)
+        np.testing.assert_allclose(np.asarray(logits, np.float32),
+                                   np.asarray(full[:, -1], np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+class TestActivationBackendsInModel:
+    @pytest.mark.parametrize("impl", ["exact", "cr", "cr_fixed", "pwl"])
+    def test_backends_run_and_agree_roughly(self, impl):
+        cfg = registry.get("paper_tanh", smoke=True)
+        cfg = dataclasses.replace(
+            cfg, activation=dataclasses.replace(cfg.activation, impl=impl))
+        params, _ = M.materialize_params(cfg)
+        eng = ActivationEngine(cfg.activation)
+        batch = make_batch(cfg, 1, 16, seed=9)
+        loss, _ = M.loss_fn(params, batch, cfg, eng)
+        assert np.isfinite(float(loss))
+
+    def test_cr_close_to_exact_end_to_end(self):
+        cfg_e = registry.get("paper_tanh", smoke=True)
+        cfg_e = dataclasses.replace(
+            cfg_e, activation=dataclasses.replace(cfg_e.activation, impl="exact"))
+        cfg_c = dataclasses.replace(
+            cfg_e, activation=dataclasses.replace(cfg_e.activation, impl="cr"))
+        params, _ = M.materialize_params(cfg_e)
+        batch = make_batch(cfg_e, 1, 16, seed=11)
+        le = M.forward_fn(params, batch, cfg_e, ActivationEngine(cfg_e.activation))
+        lc_ = M.forward_fn(params, batch, cfg_c, ActivationEngine(cfg_c.activation))
+        # CR spline error per activation ~1e-4; end-to-end logit drift small
+        assert float(jnp.max(jnp.abs(le - lc_))) < 0.05
+
+
+class TestConfigs:
+    @pytest.mark.parametrize("arch", registry.assigned_archs())
+    def test_full_config_fields(self, arch):
+        cfg = registry.get(arch)
+        assert cfg.padded_vocab % 16 == 0
+        assert cfg.param_count() > 0
+        if cfg.n_experts:
+            assert cfg.active_param_count() < cfg.param_count()
+
+    def test_full_param_counts_in_expected_range(self):
+        # sanity vs the published sizes (rough: embed + padding tolerance)
+        expect = {
+            "yi-34b": (30e9, 40e9),
+            "olmo-1b": (0.9e9, 1.6e9),
+            "qwen3-0.6b": (0.4e9, 0.9e9),
+            "qwen2.5-3b": (2.5e9, 4e9),
+            "hymba-1.5b": (1.0e9, 2.2e9),
+            "mixtral-8x22b": (120e9, 150e9),
+            "llama4-scout-17b-a16e": (95e9, 120e9),
+            "qwen2-vl-2b": (1.2e9, 2.5e9),
+            "falcon-mamba-7b": (6e9, 9e9),
+            "musicgen-large": (1.5e9, 3.5e9),
+        }
+        for arch, (lo, hi) in expect.items():
+            n = registry.get(arch).param_count()
+            assert lo <= n <= hi, (arch, n)
