@@ -8,13 +8,16 @@ is for relative comparisons between lookup strategies only.
 """
 from __future__ import annotations
 
+import json
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.activations import tanh_table
+from repro.core.activations import ActivationConfig, ActivationEngine, tanh_table
+from repro.kernels import epilogue as epi
 from repro.kernels import ops, ref
 from repro.kernels import cr_act as cr_act_mod
 
@@ -51,11 +54,12 @@ def run(verbose: bool = True) -> dict:
             rows.append(dict(kernel="cr_act", lookup=lookup, shape=shape,
                              t_kernel_ms=t_k * 1e3, t_ref_ms=t_ref * 1e3,
                              max_abs_err=err))
-    # fused GLU
+    # fused GLU (distinct keys: wg == wu would mask gate/up operand swaps)
     for (m, d, f) in ((128, 256, 512),):
-        xs = jax.random.normal(key, (m, d), jnp.float32)
-        wg = jax.random.normal(key, (d, f), jnp.float32) / np.sqrt(d)
-        wu = jax.random.normal(key, (d, f), jnp.float32) / np.sqrt(d)
+        kx, kg, ku = jax.random.split(key, 3)
+        xs = jax.random.normal(kx, (m, d), jnp.float32)
+        wg = jax.random.normal(kg, (d, f), jnp.float32) / np.sqrt(d)
+        wu = jax.random.normal(ku, (d, f), jnp.float32) / np.sqrt(d)
         t_ref = _time(jax.jit(
             lambda a, b, c: ref.fused_glu_ref(a, b, c, table)), xs, wg, wu)
         t_k = _time(lambda a, b, c: ops.fused_glu(a, b, c), xs, wg, wu)
@@ -65,32 +69,83 @@ def run(verbose: bool = True) -> dict:
                          t_kernel_ms=t_k * 1e3, t_ref_ms=t_ref * 1e3,
                          max_abs_err=err))
 
+    # every spline epilogue through the single-pass element-wise kernel
+    x_epi = jax.random.normal(key, (256, 512), jnp.float32) * 2.0
+    for act in epi.EPILOGUES:
+        etab = epi.table_for(act, 4.0, 32)
+        t_ref = _time(jax.jit(lambda v, a=act, tb=etab: ref.act_ref(v, a, tb)),
+                      x_epi)
+        t_k = _time(lambda v, a=act: ops.act(v, a), x_epi)
+        err = float(jnp.max(jnp.abs(
+            ops.act(x_epi, act) - ref.act_ref(x_epi, act, etab))))
+        rows.append(dict(kernel="epilogue", lookup=act, shape=(256, 512),
+                         t_kernel_ms=t_k * 1e3, t_ref_ms=t_ref * 1e3,
+                         max_abs_err=err))
+
+    # fused vs unfused GLU MLP (the fuse_mlp hot path): one kernel launch
+    # vs two einsum matmuls + an engine nonlinearity + a multiply
+    eng = ActivationEngine(ActivationConfig(impl="cr", depth=32))
+    mlp_rows = []
+    for (m, d, f) in ((64, 256, 512),):
+        kx, kg, ku = jax.random.split(jax.random.fold_in(key, 1), 3)
+        xs = jax.random.normal(kx, (m, d), jnp.float32) * 0.5
+        wg = jax.random.normal(kg, (d, f), jnp.float32) / np.sqrt(d)
+        wu = jax.random.normal(ku, (d, f), jnp.float32) / np.sqrt(d)
+
+        def unfused(a, b, c):
+            return eng.silu(a @ b) * (a @ c)
+
+        t_unfused = _time(jax.jit(unfused), xs, wg, wu)
+        t_fused = _time(lambda a, b, c: ops.fused_glu(a, b, c, act="silu"),
+                        xs, wg, wu)
+        err = float(jnp.max(jnp.abs(
+            ops.fused_glu(xs, wg, wu, act="silu") - unfused(xs, wg, wu))))
+        mlp_rows.append(dict(kernel="mlp_fused_vs_unfused",
+                             shape=(m, d, f), act="silu",
+                             t_fused_ms=t_fused * 1e3,
+                             t_unfused_ms=t_unfused * 1e3,
+                             max_abs_err=err,
+                             hbm_writes_fused=1, hbm_writes_unfused=3))
+
     ws = vmem_working_set(cr_act_mod.DEFAULT_BLOCK_ROWS,
                           cr_act_mod.DEFAULT_BLOCK_COLS, 32)
     checks = []
     if ws > 16 * 2 ** 20:
         checks.append(f"cr_act default block working set {ws} > 16 MiB VMEM")
     for r in rows:
-        tol = 1e-5 if r["kernel"] == "cr_act" else 5e-4  # f32 matmul assoc
-        if r["max_abs_err"] > tol:
+        tol = 1e-5 if r["kernel"] in ("cr_act", "epilogue") else 5e-4
+        if r["max_abs_err"] > tol:  # (5e-4: f32 matmul assoc)
             checks.append(f"{r['kernel']}/{r['lookup']} {r['shape']} err "
                           f"{r['max_abs_err']:.2e} > {tol}")
+    for r in mlp_rows:
+        if r["max_abs_err"] > 5e-4:
+            checks.append(f"{r['kernel']} {r['shape']} err "
+                          f"{r['max_abs_err']:.2e} > 5e-4")
 
     if verbose:
         print("\n== Pallas kernels (interpret mode; timings are relative) ==")
         for r in rows:
-            print(f"{r['kernel']:>10}/{r['lookup']:<7} {str(r['shape']):<18}"
+            print(f"{r['kernel']:>10}/{r['lookup']:<9} {str(r['shape']):<18}"
                   f" kernel {r['t_kernel_ms']:9.1f} ms | jnp-ref "
                   f"{r['t_ref_ms']:7.1f} ms | max|err| {r['max_abs_err']:.2e}")
+        for r in mlp_rows:
+            print(f"{r['kernel']:>10}/{r['act']:<9} {str(r['shape']):<18}"
+                  f" fused {r['t_fused_ms']:10.1f} ms | unfused "
+                  f"{r['t_unfused_ms']:7.1f} ms | max|err| "
+                  f"{r['max_abs_err']:.2e} | HBM writes "
+                  f"{r['hbm_writes_fused']} vs {r['hbm_writes_unfused']}")
         print(f"cr_act default block VMEM working set: {ws/2**10:.0f} KiB "
               f"(16 MiB/core budget)")
         status = "PASS" if not checks else "FAIL"
         for c in checks:
             print("  CHECK FAILED:", c)
         print(f"kernel_bench: {status}")
-    return {"rows": rows, "checks": checks,
+    return {"rows": rows, "mlp": mlp_rows, "checks": checks,
             "status": "PASS" if not checks else "FAIL"}
 
 
 if __name__ == "__main__":
-    run()
+    as_json = "--json" in sys.argv
+    result = run(verbose=not as_json)
+    if as_json:
+        print(json.dumps(result, indent=2, default=str))

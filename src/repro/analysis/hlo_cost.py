@@ -32,9 +32,7 @@ to within a few percent on flops (see tests/test_hlo_cost.py).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Iterator
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -457,6 +455,22 @@ def analyze_hlo(hlo_text: str, profile: bool = False,
 
     walk("__entry__", 1.0, False, ())
     return totals
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """XLA's own cost analysis as a flat dict, across jax API versions.
+
+    jax <= 0.4.30 returned a dict (or a per-partition list on some
+    backends); 0.4.31+ returns a one-element list of dicts. Normalize to
+    the first partition's dict — the only consumer semantics we rely on
+    (``flops``, ``bytes accessed``) are per-module either way.
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)
 
 
 def analyze_compiled(compiled) -> CostTotals:

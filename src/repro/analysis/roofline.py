@@ -104,14 +104,15 @@ class Roofline:
 
 def analyze(compiled, *, n_devices: int, model_flops: float,
             hlo_text: str | None = None) -> Roofline:
-    ca = compiled.cost_analysis() or {}
+    from . import hlo_cost
+
+    ca = hlo_cost.xla_cost_analysis(compiled)
     text = hlo_text if hlo_text is not None else compiled.as_text()
 
     # XLA's cost_analysis counts while-loop bodies ONCE (verified; see
     # analysis/hlo_cost.py) — fiction for scanned layer stacks. Our own
     # call-graph walk multiplies by known trip counts. The raw XLA
     # numbers are kept in the result dict as a cross-check.
-    from . import hlo_cost
     totals = hlo_cost.analyze_hlo(text)
     flops = totals.flops
     hbm = totals.bytes

@@ -11,6 +11,27 @@ from repro.models.config import ModelConfig
 # float-exact baseline the papers' host models assume.
 CR_ACT = ActivationConfig(impl="cr", depth=32, x_max=4.0)
 
+# Hardware-deployment engine: every nonlinearity is ONE Pallas epilogue
+# kernel launch (kernels/epilogue.py) instead of a jnp interpolation.
+CR_ACT_KERNEL = ActivationConfig(impl="cr", depth=32, x_max=4.0,
+                                 use_kernel=True)
+
+
+def fused_of(cfg: ModelConfig) -> ModelConfig:
+    """The fully-fused deployment of an arch: GLU FFNs run through the
+    fused matmul+epilogue kernel and the engine's element-wise
+    nonlinearities through single-pass epilogue kernels. Identity on
+    configs with nothing to fuse (no gated FFN, or an FFN activation
+    with no spline epilogue) — the result always passes the
+    launch/steps.py fusion validation."""
+    from repro.kernels.epilogue import EPILOGUES
+    if not (cfg.glu and cfg.has_ffn and cfg.mlp_act in EPILOGUES):
+        return cfg
+    return dataclasses.replace(
+        cfg, fuse_mlp=True,
+        activation=dataclasses.replace(cfg.activation, impl="cr",
+                                       use_kernel=True))
+
 
 def smoke_of(cfg: ModelConfig, **extra) -> ModelConfig:
     """Reduced same-family config: tiny dims, few layers, small vocab."""

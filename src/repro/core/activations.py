@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import catmull_rom as cr
-from .fixed_point import Q2_13, QFormat, dequantize, quantize
+from .fixed_point import dequantize, quantize
 
 SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
 
@@ -46,7 +46,9 @@ class ActivationConfig:
     depth: int = 32              # LUT depth (paper's flagship: 32)
     x_max: float = 4.0           # table range for tanh (paper: 4.0)
     taylor_terms: int = 3        # for impl="taylor"
-    use_kernel: bool = False     # route through the Pallas cr_act kernel
+    use_kernel: bool = False     # impl="cr": route EVERY nonlinearity
+                                 # through a single-pass Pallas epilogue
+                                 # kernel (kernels/epilogue.py)
 
     def tag(self) -> str:
         return f"{self.impl}-d{self.depth}"
@@ -79,10 +81,18 @@ def softplus_residual_table(x_max: float, depth: int) -> cr.SplineTable:
 # tanh backends
 # --------------------------------------------------------------------------
 
+def _kernel_act(name: str, x, cfg: ActivationConfig):
+    """One-pallas_call dispatch: the whole epilogue (identity wiring and
+    all) runs inside the kernel — no extra element-wise jnp passes."""
+    from repro.kernels import epilogue as epi  # lazy: avoid cycle
+    from repro.kernels import ops as kernel_ops
+    return kernel_ops.act(x, name,
+                          table=epi.table_for(name, cfg.x_max, cfg.depth))
+
+
 def _tanh_cr(x, cfg: ActivationConfig):
     if cfg.use_kernel:
-        from repro.kernels import ops as kernel_ops  # lazy: avoid cycle
-        return kernel_ops.cr_act(x, table=tanh_table(cfg.x_max, cfg.depth))
+        return _kernel_act("tanh", x, cfg)
     return cr.interpolate(tanh_table(cfg.x_max, cfg.depth), x)
 
 
@@ -181,6 +191,11 @@ class ActivationEngine:
             backend = _TANH_BACKENDS[self.cfg.impl]
             self._tanh = partial(backend, cfg=self.cfg)
 
+    @property
+    def _kernelized(self) -> bool:
+        """True when every nonlinearity lowers to ONE epilogue kernel."""
+        return self.cfg.impl == "cr" and self.cfg.use_kernel
+
     # -- primitives ---------------------------------------------------
     def tanh(self, x):
         return self._tanh(x)
@@ -188,22 +203,30 @@ class ActivationEngine:
     def sigmoid(self, x):
         if self.cfg.impl == "exact":
             return jax.nn.sigmoid(x)
+        if self._kernelized:
+            return _kernel_act("sigmoid", x, self.cfg)
         return 0.5 * (1.0 + self.tanh(x * 0.5))
 
     def silu(self, x):
         if self.cfg.impl == "exact":
             return jax.nn.silu(x)
+        if self._kernelized:
+            return _kernel_act("silu", x, self.cfg)
         return x * self.sigmoid(x)
 
     def gelu_tanh(self, x):
         if self.cfg.impl == "exact":
             return jax.nn.gelu(x, approximate=True)
+        if self._kernelized:
+            return _kernel_act("gelu_tanh", x, self.cfg)
         inner = SQRT_2_OVER_PI * (x + 0.044715 * (x * x * x))
         return 0.5 * x * (1.0 + self.tanh(inner))
 
     def softplus(self, x):
         if self.cfg.impl == "exact":
             return jax.nn.softplus(x)
+        if self._kernelized:
+            return _kernel_act("softplus", x, self.cfg)
         tab = softplus_residual_table(max(self.cfg.x_max, 8.0),
                                       max(self.cfg.depth, 64))
         h = cr.interpolate(tab, jnp.abs(x), odd=False)

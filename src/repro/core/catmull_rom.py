@@ -21,11 +21,10 @@ from __future__ import annotations
 
 from typing import Callable, NamedTuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .fixed_point import QFormat, Q2_13, fx_dot4, quantize, sat
+from .fixed_point import QFormat, Q2_13, fx_dot4, quantize
 
 # Rows act on [P_{k-1}, P_k, P_{k+1}, P_{k+2}]; columns are t^3, t^2, t, 1.
 # f(t) = 0.5 * P . (BASIS @ [t^3, t^2, t, 1])
@@ -145,40 +144,67 @@ def build_fixed_table(fn, x_max: float, depth: int, fmt: QFormat = Q2_13) -> Fix
     return FixedTable(fmt, float(x_max), int(depth), t_bits, windows_q, sat_q)
 
 
+def _wrap_i32(v: int) -> int:
+    """Python int -> its int32 two's-complement representative."""
+    v &= 0xFFFFFFFF
+    return v - (1 << 32) if v >= (1 << 31) else v
+
+
 def basis_weights_fixed(t_q, ftab: FixedTable):
     """Fixed-point basis evaluation: t_q is the raw low-bit residue
     (0 .. 2^t_bits - 1).
 
     Key hardware observation (this is what lets the paper's circuit hit
-    its Table I/II numbers): t has only ``t_bits`` (= 8 for the flagship
-    config) significant fractional bits, so t^2 (16 bits) and t^3 (24
-    bits) are EXACTLY representable with small multipliers (8x8 and
-    16x8). The four basis polynomials have integer coefficients, so the
-    whole t-vector is computed exactly, aligned at 3*t_bits fractional
-    bits; the only rounding in the datapath is the single shift-round at
-    the MAC output. (An earlier variant of this datapath rounded every
+    its Table I/II numbers): t has only ``t_bits`` (= 10 for the
+    flagship config) significant fractional bits, so t^2 (2*tb bits) and
+    t^3 (3*tb bits) are EXACTLY representable with small multipliers.
+    The four basis polynomials have integer coefficients, so the whole
+    t-vector is computed exactly, aligned at 3*t_bits fractional bits;
+    the only rounding in the datapath is the single shift-round at the
+    MAC output. (An earlier variant of this datapath rounded every
     Horner step back to Q2.13 and measurably lost one LSB of max error —
     0.000276 vs the paper's 0.000152; recorded in EXPERIMENTS.md.)
 
-    Returns int64 [..., 4], scaled 2^(3*t_bits+1) x the true basis value
-    (the +1 carries the CR global 1/2, folded into the MAC's final shift).
+    Returns int32 [..., 4], scaled 2^(3*t_bits+1) x the true basis value
+    (the +1 carries the CR global 1/2, folded into the MAC's final
+    shift) — EXACT MOD 2^32. Two's-complement wraparound of the Horner
+    intermediates is harmless because every true basis value fits 32
+    bits, with ONE exception: w1(t=0) = 2^(3tb+1) = 2^31 for tb=10,
+    which wraps to -2^31. t = 0 is a knot hit, so ``interpolate_fixed``
+    bypasses the MAC there (the hardware equivalent is the index-hit
+    mux). int64 is not an option for the lattice: it neither exists on
+    TPU vector lanes nor lowers reliably inside remat'd scans on CPU
+    (jax re-lowers jax.checkpoint constants under the ambient 32-bit
+    config, emitting invalid mixed i64/i32 ops).
     """
     tb = ftab.t_bits
-    # The wide lattice needs true int64 (up to 3*tb+2 <= 38 bits); jax
-    # default x32 truncates int64 -> int32, so enable x64 locally. This is
-    # trace-time config: it composes with jit and with globally-enabled
-    # x64 alike. (Hardware perspective: these are the exact partial-product
-    # widths a synthesized datapath carries between pipeline stages.)
-    with jax.enable_x64(True):
-        T = t_q.astype(jnp.int64)             # t * 2^tb, exact
-        T2 = T * T                            # t^2 * 2^2tb, exact
-        T3 = T2 * T                           # t^3 * 2^3tb, exact
-        # align everything at 3*tb fractional bits; all coefficients integer.
-        w0 = -T3 + 2 * (T2 << tb) - (T << (2 * tb))
-        w1 = 3 * T3 - 5 * (T2 << tb) + (jnp.int64(2) << (3 * tb))
-        w2 = -3 * T3 + 4 * (T2 << tb) + (T << (2 * tb))
-        w3 = T3 - (T2 << tb)
-        return jnp.stack([w0, w1, w2, w3], axis=-1)
+    if 3 * tb + 1 > 31:
+        # wide lattice (depth-8/16 tables at Q2.13: tb = 11/12): the true
+        # basis values exceed 32 bits, so fall back to an int64 lattice
+        # under a local x64 override. Works in plain/jit traces (the
+        # error-analysis sweeps) but NOT inside jax.checkpoint-remat'd
+        # scans, where jax re-lowers constants under the ambient 32-bit
+        # config — model hot paths use the flagship tb=10 int32 datapath.
+        from jax.experimental import enable_x64
+        with enable_x64(True):
+            T = t_q.astype(jnp.int64)
+            T2 = T * T
+            T3 = T2 * T
+            w0 = -T3 + 2 * (T2 << tb) - (T << (2 * tb))
+            w1 = 3 * T3 - 5 * (T2 << tb) + (2 << (3 * tb))
+            w2 = -3 * T3 + 4 * (T2 << tb) + (T << (2 * tb))
+            w3 = T3 - (T2 << tb)
+            return jnp.stack([w0, w1, w2, w3], axis=-1)
+    T = t_q.astype(jnp.int32)                 # t * 2^tb, exact
+    T2 = T * T                                # t^2 * 2^2tb, exact
+    T3 = T2 * T                               # t^3 * 2^3tb, exact
+    two_pow = _wrap_i32(2 << (3 * tb))        # 2^(3tb+1) mod 2^32
+    # align everything at 3*tb fractional bits; all coefficients integer.
+    w0 = -T3 + 2 * (T2 << tb) - (T << (2 * tb))
+    w1 = 3 * T3 - 5 * (T2 << tb) + two_pow
+    w2 = -3 * T3 + 4 * (T2 << tb) + (T << (2 * tb))
+    w3 = T3 - (T2 << tb)
+    return jnp.stack([w0, w1, w2, w3], axis=-1)
 
 
 def interpolate_fixed(ftab: FixedTable, x_q):
@@ -200,10 +226,11 @@ def interpolate_fixed(ftab: FixedTable, x_q):
     p = jnp.asarray(ftab.windows_q)[idx_c]                  # [..., 4]
     # wide MAC: products at frac_bits + 3*t_bits fraction; ONE final
     # shift-round back to the output format (+1 folds the CR global 1/2).
-    with jax.enable_x64(True):
-        y = fx_dot4(p, w, fmt,
-                    extra_shift=3 * ftab.t_bits - fmt.frac_bits + 1)
-        y = y.astype(jnp.int32)
+    y = fx_dot4(p, w, fmt, extra_shift=3 * ftab.t_bits - fmt.frac_bits + 1)
+    # t = 0 is an exact knot hit whose basis weight 2^(3tb+1) wraps the
+    # 32-bit lattice (see basis_weights_fixed): bypass with the knot
+    # value, which IS the exact MAC result there (hardware: index mux).
+    y = jnp.where(t_q == 0, p[..., 1], y)
     y = jnp.where(in_range, y, jnp.int32(ftab.sat_q))
     return jnp.where(sign_neg, -y, y)
 

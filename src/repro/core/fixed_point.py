@@ -107,22 +107,57 @@ def fx_mul(a, b, fmt: QFormat = Q2_13, rounding: str = "floor"):
 
 def fx_dot4(p, c, fmt: QFormat = Q2_13, rounding: str = "nearest",
             extra_shift: int = 0):
-    """4-tap MAC: sum_i p[i]*c[i] with a wide accumulator.
+    """4-tap MAC: sum_i p[i]*c[i] with a wide accumulator, emulated
+    EXACTLY on 32-bit lanes.
 
     ``p``/``c``: int32 arrays whose last axis has length 4 (the paper's
     P-vector of control points and t-vector of basis polynomial values).
-    Models the Fig. 2 MAC the way real MACs work: full-width products are
-    accumulated (Q 2*frac) and a single shift-with-round produces the
-    Q2.13 output, which then saturates.
+    Models the Fig. 2 MAC the way real MACs work: full-width products
+    are accumulated and ONE shift-with-round produces the output, which
+    then saturates.
+
+    The wide accumulator (up to 47 bits for the flagship config) is NOT
+    an int64: int64 neither exists on TPU vector lanes nor lowers
+    reliably inside remat'd scans on CPU (jax re-lowers jax.checkpoint
+    constants under the ambient 32-bit config, emitting invalid mixed
+    i64/i32 ops). Instead ``c`` is split radix-2^s into three pieces
+    (s = S//3, S the total output shift) and three int32 partial dots
+    are carried with exact progressive carries — the same partial-
+    product decomposition a synthesized fixed-width MAC pipelines.
+    Exact when |p| < 2^15 and every piece product fits 31 bits
+    (|p|·2^max(s, 32-2s) < 2^29); both hold for every Q-format and
+    basis-lattice width this repo builds (see basis_weights_fixed).
     """
-    prods = p.astype(jnp.int64) * c.astype(jnp.int64)
-    acc = jnp.sum(prods, axis=-1)
-    shift = fmt.frac_bits + extra_shift
+    S = fmt.frac_bits + extra_shift
+    if S < 3:
+        raise ValueError(f"fx_dot4 output shift {S} too small to split")
+    if c.dtype == jnp.int64:
+        # wide-lattice fallback (basis_weights_fixed, t_bits > 10): plain
+        # int64 MAC under the caller's x64 override
+        from jax.experimental import enable_x64
+        with enable_x64(True):
+            acc = jnp.sum(p.astype(jnp.int64) * c, axis=-1)
+            if rounding == "nearest":
+                acc = acc + (1 << (S - 1))
+            return sat((acc >> S).astype(jnp.int32), fmt)
+    s = S // 3                       # piece width; S >= 3s >= 2s + 1
+    mask = (1 << s) - 1
+    p32 = p.astype(jnp.int32)
+    c32 = c.astype(jnp.int32)
+    c_hi = c32 >> (2 * s)            # arithmetic: floor, keeps sign
+    c_mid = (c32 >> s) & mask        # in [0, 2^s)
+    c_lo = c32 & mask                # in [0, 2^s)
+    a2 = jnp.sum(p32 * c_hi, axis=-1)
+    a1 = jnp.sum(p32 * c_mid, axis=-1)
+    a0 = jnp.sum(p32 * c_lo, axis=-1)
+    # acc = a2*2^2s + a1*2^s + a0; fold the rounding addend 2^(S-1) into
+    # the top piece (S-1-2s >= s-1 >= 0), then carry-propagate so the
+    # final arithmetic shift is an exact floor of (acc + round)/2^S.
     if rounding == "nearest":
-        acc = (acc + (1 << (shift - 1))) >> shift
-    else:
-        acc = acc >> shift
-    return sat(acc.astype(jnp.int32), fmt)
+        a2 = a2 + (1 << (S - 1 - 2 * s))
+    carry1 = a1 + (a0 >> s)
+    carry2 = a2 + (carry1 >> s)
+    return sat(carry2 >> (S - 2 * s), fmt)
 
 
 def representable_grid(fmt: QFormat = Q2_13) -> np.ndarray:

@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the CR-spline activation unit.
+
+Layout (the spline-epilogue subsystem):
+  epilogue.py   the ONE in-kernel CR datapath + composable epilogues
+                (tanh/sigmoid/silu/gelu_tanh/softplus) and both kernel
+                builders (element-wise, fused GLU)
+  cr_act.py     thin matmul-free instance (act="tanh") — back-compat
+  fused_glu.py  thin GLU instance — back-compat
+  ops.py        jit'd public wrappers: padding, leading dims, custom-VJP
+                recompute backward, interpret-mode selection
+  ref.py        pure-jnp oracles the kernels are validated against
+"""

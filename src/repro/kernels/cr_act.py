@@ -1,80 +1,19 @@
-"""Pallas TPU kernel: element-wise Catmull-Rom spline activation.
+"""Element-wise CR-spline tanh: the matmul-free instance of the shared
+epilogue kernel-builder (see ``epilogue.py`` for the datapath notes).
 
-TPU adaptation of the paper's Fig. 2/3 datapath:
-  * the 32x4 control-point window table is a VMEM-resident constant
-    (hardware: bit-level combinatorial LUT — no TPU analogue),
-  * index/t split = float multiply + floor (hardware: bit slice),
-  * basis polynomials evaluated in Horner form on the VPU lanes
-    (hardware: the 'polynomial computation logic' variant),
-  * the 4-tap MAC is a lane-wise fused multiply-add chain.
-
-Two LUT-lookup strategies:
-  onehot  indices -> one-hot [block, depth] -> dot with the [depth, 4]
-          window table on the MXU. Dense matmul replaces irregular
-          addressing — the TPU-native move for tiny tables.
-  take    vector gather from VMEM (fine in interpret mode; on real TPUs
-          lowers to a select chain for tiny tables).
-
-Grid: 2D blocks over a (rows, cols) view of the input. Block shape is
-(block_rows, block_cols) with block_cols a multiple of 128 (lane width)
-and block_rows a multiple of 8 (sublane), VMEM working set ~2-4 MB.
+Kept as a module for API stability — the CR-tanh block itself lives in
+``epilogue._cr_tanh_block``; this file only binds ``act="tanh"``.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-from repro.core.catmull_rom import SplineTable
-
-DEFAULT_BLOCK_ROWS = 32
-DEFAULT_BLOCK_COLS = 512
-
-
-def _basis_weights_f32(t):
-    """CR basis (incl. the 1/2) in f32 Horner form; t: [.., 4]-free block."""
-    w0 = 0.5 * (((-t + 2.0) * t - 1.0) * t)
-    w1 = 0.5 * ((3.0 * t - 5.0) * t * t + 2.0)
-    w2 = 0.5 * (((-3.0 * t + 4.0) * t + 1.0) * t)
-    w3 = 0.5 * ((t - 1.0) * t * t)
-    return w0, w1, w2, w3
-
-
-def _cr_act_kernel(x_ref, win_ref, o_ref, *, inv_period: float, depth: int,
-                   x_max: float, saturation: float, lookup: str):
-    x = x_ref[...].astype(jnp.float32)              # [bm, bn]
-    ax = jnp.abs(x)
-    u = ax * inv_period
-    k = jnp.clip(jnp.floor(u), 0.0, depth - 1.0)
-    t = u - k                                        # in [0, 1)
-    ki = k.astype(jnp.int32)
-
-    if lookup == "onehot":
-        bm, bn = x.shape
-        iota = jax.lax.broadcasted_iota(jnp.int32, (bm, bn, depth), 2)
-        onehot = (ki[..., None] == iota).astype(jnp.float32)
-        # [bm, bn, depth] . [depth, 4] on the MXU
-        p = jax.lax.dot_general(
-            onehot, win_ref[...].astype(jnp.float32),
-            dimension_numbers=(((2,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)      # [bm, bn, 4]
-        p0, p1, p2, p3 = p[..., 0], p[..., 1], p[..., 2], p[..., 3]
-    elif lookup == "take":
-        win = win_ref[...].astype(jnp.float32)       # [depth, 4]
-        p0 = jnp.take(win[:, 0], ki)
-        p1 = jnp.take(win[:, 1], ki)
-        p2 = jnp.take(win[:, 2], ki)
-        p3 = jnp.take(win[:, 3], ki)
-    else:
-        raise ValueError(f"unknown lookup {lookup!r}")
-
-    w0, w1, w2, w3 = _basis_weights_f32(t)
-    y = p0 * w0 + p1 * w1 + p2 * w2 + p3 * w3        # the 4-tap MAC
-    y = jnp.where(ax >= x_max, jnp.float32(saturation), y)
-    y = jnp.where(x < 0.0, -y, y)                    # odd-symmetry sign fixup
-    o_ref[...] = y.astype(o_ref.dtype)
+from .epilogue import (  # noqa: F401  (re-exported: public tuning knobs)
+    DEFAULT_BLOCK_COLS,
+    DEFAULT_BLOCK_ROWS,
+    TableSpec,
+    _basis_weights_f32,
+    _cr_tanh_block,
+    elementwise_2d,
+)
 
 
 def cr_act_2d(x, windows, *, period: float, x_max: float, saturation: float,
@@ -82,23 +21,10 @@ def cr_act_2d(x, windows, *, period: float, x_max: float, saturation: float,
               block_rows: int = DEFAULT_BLOCK_ROWS,
               block_cols: int = DEFAULT_BLOCK_COLS,
               interpret: bool = False):
-    """Apply the CR-spline activation to a 2D array (rows, cols divisible
-    by the block shape; `ops.cr_act` handles padding/reshaping)."""
-    rows, cols = x.shape
-    depth = windows.shape[0]
-    assert rows % block_rows == 0 and cols % block_cols == 0, (x.shape,)
-    grid = (rows // block_rows, cols // block_cols)
-    kernel = functools.partial(
-        _cr_act_kernel, inv_period=1.0 / period, depth=depth,
-        x_max=x_max, saturation=saturation, lookup=lookup)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
-            pl.BlockSpec((depth, 4), lambda i, j: (0, 0)),  # whole LUT in VMEM
-        ],
-        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        interpret=interpret,
-    )(x, windows)
+    """Apply the CR-spline tanh to a 2D array (rows, cols divisible by
+    the block shape; `ops.cr_act` handles padding/reshaping)."""
+    spec = TableSpec(period=period, depth=windows.shape[0], x_max=x_max,
+                     saturation=saturation)
+    return elementwise_2d(x, windows, spec=spec, act="tanh", lookup=lookup,
+                          block_rows=block_rows, block_cols=block_cols,
+                          interpret=interpret)

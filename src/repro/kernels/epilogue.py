@@ -1,0 +1,291 @@
+"""The spline-epilogue subsystem: ONE in-kernel CR activation codepath.
+
+The paper's thesis is that a single small Catmull-Rom tanh unit serves
+every nonlinearity in an accelerator — sigmoid, SiLU and GELU derive
+from it by identities, softplus from a second tiny residual table. This
+module is that unit for Pallas TPU kernels. It owns:
+
+  * ``TableSpec`` — the static (hashable) geometry of a spline LUT, so
+    kernels can close over depth/period/saturation while the [depth, 4]
+    window array rides along as a normal VMEM operand;
+  * ``cr_spline_block`` — the Fig. 2/3 datapath on a 2D f32 block
+    (index/t split, 4-tap basis MAC, saturation, optional odd-symmetry
+    sign fixup) with both LUT-lookup strategies (onehot-MXU / take);
+  * the composable epilogues ``tanh | sigmoid | silu | gelu_tanh |
+    softplus``, each a pure f32->f32 block function built on the CR
+    block (``make_epilogue``), plus ``table_for`` mapping each epilogue
+    to the table it reads (the tanh table for the first four, the even
+    softplus residual table for the last);
+  * the two kernel builders every public op instantiates:
+      - ``elementwise_2d``: matmul-free epilogue — grid over (rows,
+        cols) blocks, epilogue applied straight to the input block
+        (``cr_act_2d`` is the ``act="tanh"`` instance);
+      - ``glu_2d``: GLU epilogue — (M, N, K) matmul grid with two f32
+        VMEM accumulators, epilogue fired on the gate accumulator at
+        the last K step (``fused_glu_2d`` is an instance).
+
+Downstream, ``ops.py`` wraps these with padding/jit, the
+``ActivationEngine`` dispatches every ``use_kernel=True`` nonlinearity
+here as a SINGLE ``pallas_call``, and ``models/layers.apply_mlp`` routes
+whole GLU FFNs through ``glu_2d`` under ``ModelConfig.fuse_mlp``. Every
+future variant (bf16 tables, fixed-point datapath, attention epilogues)
+is a local edit to this file.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import catmull_rom as cr
+
+SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+
+EPILOGUES = ("tanh", "sigmoid", "silu", "gelu_tanh", "softplus")
+LOOKUPS = ("onehot", "take")
+
+DEFAULT_BLOCK_ROWS = 32
+DEFAULT_BLOCK_COLS = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSpec:
+    """Static geometry of a spline LUT (everything but the window values).
+
+    Hashable, so it can be a static argument of jitted wrappers and be
+    closed over by kernel bodies; the [depth, 4] float windows are passed
+    separately as an array operand (whole table resident in VMEM).
+    """
+
+    period: float
+    depth: int
+    x_max: float
+    saturation: float
+
+    @property
+    def inv_period(self) -> float:
+        return 1.0 / self.period
+
+    @classmethod
+    def of(cls, table: cr.SplineTable) -> "TableSpec":
+        return cls(period=table.period, depth=table.depth,
+                   x_max=table.x_max, saturation=table.saturation)
+
+
+def table_for(act: str, x_max: float, depth: int) -> cr.SplineTable:
+    """The spline table an epilogue reads. tanh-family epilogues share
+    ONE tanh table (the paper's single hardware unit); softplus has its
+    own even residual table h(u) = log(1 + e^-u), widened exactly like
+    the engine's jnp path so kernel and jnp backends agree bit-for-bit
+    in table contents."""
+    from repro.core.activations import softplus_residual_table, tanh_table
+    if act == "softplus":
+        return softplus_residual_table(max(x_max, 8.0), max(depth, 64))
+    if act in EPILOGUES:
+        return tanh_table(x_max, depth)
+    raise ValueError(f"unknown epilogue {act!r}")
+
+
+def _basis_weights_f32(t):
+    """CR basis (incl. the 1/2) in f32 Horner form; t in [0, 1)."""
+    w0 = 0.5 * (((-t + 2.0) * t - 1.0) * t)
+    w1 = 0.5 * ((3.0 * t - 5.0) * t * t + 2.0)
+    w2 = 0.5 * (((-3.0 * t + 4.0) * t + 1.0) * t)
+    w3 = 0.5 * ((t - 1.0) * t * t)
+    return w0, w1, w2, w3
+
+
+def _cr_tanh_block(v, win, *, spec: TableSpec, lookup: str = "onehot",
+                   odd: bool = True):
+    """CR-spline interpolation of a 2D f32 block — the shared datapath.
+
+    TPU adaptation of the paper's Fig. 2/3: index/t split is a float
+    multiply + floor (hardware: bit slice), the basis polynomials run in
+    Horner form on the VPU lanes, the 4-tap MAC is a lane-wise FMA chain.
+
+    ``lookup`` selects how the [depth, 4] window LUT is addressed:
+      onehot  indices -> one-hot [*, depth] -> dot with the table on the
+              MXU. Dense matmul replaces irregular addressing — the
+              TPU-native move for tiny tables.
+      take    vector gather from VMEM (fine in interpret mode; lowers to
+              a select chain for tiny tables on real TPUs).
+
+    ``odd=True`` evaluates on |v| and restores the sign (tanh family);
+    ``odd=False`` evaluates the table at v directly (softplus residual —
+    the caller supplies a non-negative argument).
+    """
+    av = jnp.abs(v) if odd else v
+    u = av * spec.inv_period
+    k = jnp.clip(jnp.floor(u), 0.0, spec.depth - 1.0)
+    t = u - k                                        # in [0, 1)
+    ki = k.astype(jnp.int32)
+
+    if lookup == "onehot":
+        bm, bn = v.shape
+        iota = jax.lax.broadcasted_iota(jnp.int32, (bm, bn, spec.depth), 2)
+        onehot = (ki[..., None] == iota).astype(jnp.float32)
+        # [bm, bn, depth] . [depth, 4] on the MXU
+        p = jax.lax.dot_general(
+            onehot, win, dimension_numbers=(((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)      # [bm, bn, 4]
+        p0, p1, p2, p3 = p[..., 0], p[..., 1], p[..., 2], p[..., 3]
+    elif lookup == "take":
+        p0 = jnp.take(win[:, 0], ki)
+        p1 = jnp.take(win[:, 1], ki)
+        p2 = jnp.take(win[:, 2], ki)
+        p3 = jnp.take(win[:, 3], ki)
+    else:
+        raise ValueError(f"unknown lookup {lookup!r}")
+
+    w0, w1, w2, w3 = _basis_weights_f32(t)
+    y = p0 * w0 + p1 * w1 + p2 * w2 + p3 * w3        # the 4-tap MAC
+    y = jnp.where(av >= spec.x_max, jnp.float32(spec.saturation), y)
+    if odd:
+        y = jnp.where(v < 0.0, -y, y)                # odd-symmetry fixup
+    return y
+
+
+def make_epilogue(act: str, spec: TableSpec, lookup: str = "onehot"):
+    """Build the f32-block epilogue ``fn(v, win) -> y`` for ``act``.
+
+    All tanh-derived epilogues reuse ONE CR-tanh evaluation per element —
+    the identities below are the paper's wire-level derivations:
+        sigmoid(x) = (1 + tanh(x/2)) / 2        (x/2 is a wire shift)
+        silu(x)    = x * sigmoid(x)             (one extra multiplier)
+        gelu_tanh  = x/2 * (1 + tanh(c(x + 0.044715 x^3)))
+        softplus   = relu(x) + h(|x|)           (own even residual table)
+    """
+    block = functools.partial(_cr_tanh_block, spec=spec, lookup=lookup)
+    if act == "tanh":
+        return lambda v, win: block(v, win)
+    if act == "sigmoid":
+        return lambda v, win: 0.5 * (1.0 + block(v * 0.5, win))
+    if act == "silu":
+        return lambda v, win: v * (0.5 * (1.0 + block(v * 0.5, win)))
+    if act == "gelu_tanh":
+        def gelu(v, win):
+            inner = SQRT_2_OVER_PI * (v + 0.044715 * v * v * v)
+            return 0.5 * v * (1.0 + block(inner, win))
+        return gelu
+    if act == "softplus":
+        return lambda v, win: jax.nn.relu(v) + block(jnp.abs(v), win,
+                                                     odd=False)
+    raise ValueError(f"unknown epilogue {act!r}")
+
+
+# ---------------------------------------------------------------------------
+# kernel builder 1: matmul-free epilogue (element-wise over 2D blocks)
+# ---------------------------------------------------------------------------
+
+def _elementwise_kernel(x_ref, win_ref, o_ref, *, act: str, spec: TableSpec,
+                        lookup: str):
+    epi = make_epilogue(act, spec, lookup)
+    x = x_ref[...].astype(jnp.float32)               # [bm, bn]
+    y = epi(x, win_ref[...].astype(jnp.float32))
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def elementwise_2d(x, windows, *, spec: TableSpec, act: str = "tanh",
+                   lookup: str = "onehot",
+                   block_rows: int = DEFAULT_BLOCK_ROWS,
+                   block_cols: int = DEFAULT_BLOCK_COLS,
+                   interpret: bool = False):
+    """Apply one spline epilogue to a 2D array in a single pallas_call.
+
+    Grid: 2D blocks over (rows, cols); block_cols a multiple of 128
+    (lane width), block_rows a multiple of 8 (sublane). Dims must divide
+    by the block shape — ``ops.act`` handles padding/reshaping.
+    """
+    rows, cols = x.shape
+    depth = windows.shape[0]
+    assert depth == spec.depth, (depth, spec)
+    assert rows % block_rows == 0 and cols % block_cols == 0, (x.shape,)
+    grid = (rows // block_rows, cols // block_cols)
+    kernel = functools.partial(_elementwise_kernel, act=act, spec=spec,
+                               lookup=lookup)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+            pl.BlockSpec((depth, 4), lambda i, j: (0, 0)),  # whole LUT in VMEM
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, windows)
+
+
+# ---------------------------------------------------------------------------
+# kernel builder 2: GLU epilogue (fused matmuls + spline on the accumulator)
+# ---------------------------------------------------------------------------
+
+def _glu_kernel(x_ref, wg_ref, wu_ref, win_ref, o_ref, gate_acc, up_acc, *,
+                n_k: int, act: str, spec: TableSpec, lookup: str):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        gate_acc[...] = jnp.zeros_like(gate_acc)
+        up_acc[...] = jnp.zeros_like(up_acc)
+
+    x = x_ref[...]
+    gate_acc[...] += jax.lax.dot(x, wg_ref[...],
+                                 preferred_element_type=jnp.float32)
+    up_acc[...] += jax.lax.dot(x, wu_ref[...],
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k - 1)
+    def _done():
+        epi = make_epilogue(act, spec, lookup)
+        win = win_ref[...].astype(jnp.float32)
+        y = epi(gate_acc[...], win) * up_acc[...]
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def glu_2d(x, w_gate, w_up, windows, *, spec: TableSpec, act: str = "silu",
+           lookup: str = "onehot",
+           block_m: int = 128, block_n: int = 128, block_k: int = 512,
+           interpret: bool = False):
+    """out[M,N] = epilogue(x[M,K] @ w_gate[K,N]) * (x @ w_up) — the TPU
+    embodiment of the paper's deployment: the activation unit reads the
+    MAC-array accumulator directly, so the gate projection never
+    round-trips to HBM.
+
+    Grid: (M/bm, N/bn, K/bk), K innermost (TPU minor grid dim) so the
+    two f32 VMEM scratch accumulators live across the K loop; the
+    epilogue fires at the final K step. Dims must divide by the block
+    shape (``ops.fused_glu`` pads).
+    """
+    m, k = x.shape
+    k2, n = w_gate.shape
+    assert k == k2 and w_up.shape == (k, n)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        x.shape, w_gate.shape)
+    depth = windows.shape[0]
+    assert depth == spec.depth, (depth, spec)
+    n_k = k // block_k
+    kernel = functools.partial(_glu_kernel, n_k=n_k, act=act, spec=spec,
+                               lookup=lookup)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
+            pl.BlockSpec((depth, 4), lambda i, j, s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w_gate, w_up, windows)

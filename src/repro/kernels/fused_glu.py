@@ -1,121 +1,35 @@
-"""Pallas TPU kernel: fused GLU matmuls + CR-spline activation epilogue.
+"""Fused GLU matmuls + CR-spline activation: the GLU instance of the
+shared epilogue kernel-builder (see ``epilogue.py``).
 
-    out = act_cr(x @ w_gate) * (x @ w_up)
-
-This is the TPU embodiment of the paper's deployment: the activation
-unit reads the MAC-array accumulator directly. Fusing the CR spline into
-the matmul epilogue means the gate projection never round-trips to HBM —
-the activation is applied to the f32 accumulator while it still lives in
-VMEM, then multiplied with the up projection and written out once.
+    out = epilogue(x @ w_gate) * (x @ w_up)
 
 Memory traffic per (bm, bn) output tile:  x once per K-step, both weight
 tiles once, ONE output write — vs. three HBM round-trips (gate, up,
 product) for the unfused version. For d_ff-sized GLUs this removes
 ~2/3 of activation bytes in the FFN forward pass.
 
-Grid: (M/bm, N/bn, K/bk), K innermost (TPU minor grid dim) so the two
-f32 VMEM scratch accumulators live across the K loop; epilogue fires at
-the final K step.
-
-Activation epilogue options: 'silu' (x*sigmoid via the tanh table, the
-SwiGLU case), 'gelu_tanh', 'tanh'.
+Kept as a module for API stability — the CR-tanh block and the kernel
+body live in ``epilogue``; this file only re-binds the entry point.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from .cr_act import _basis_weights_f32
-
-SQRT_2_OVER_PI = 0.7978845608028654
-
-
-def _cr_tanh_block(v, win, *, inv_period: float, depth: int, x_max: float,
-                   saturation: float):
-    """CR-spline tanh of a 2D f32 block using a one-hot MXU lookup."""
-    av = jnp.abs(v)
-    u = av * inv_period
-    k = jnp.clip(jnp.floor(u), 0.0, depth - 1.0)
-    t = u - k
-    ki = k.astype(jnp.int32)
-    bm, bn = v.shape
-    iota = jax.lax.broadcasted_iota(jnp.int32, (bm, bn, depth), 2)
-    onehot = (ki[..., None] == iota).astype(jnp.float32)
-    p = jax.lax.dot_general(
-        onehot, win, dimension_numbers=(((2,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    w0, w1, w2, w3 = _basis_weights_f32(t)
-    y = p[..., 0] * w0 + p[..., 1] * w1 + p[..., 2] * w2 + p[..., 3] * w3
-    y = jnp.where(av >= x_max, jnp.float32(saturation), y)
-    return jnp.where(v < 0.0, -y, y)
-
-
-def _epilogue(gate_acc, up_acc, win, *, act: str, table_kw):
-    tanh = functools.partial(_cr_tanh_block, win=win, **table_kw)
-    if act == "silu":
-        sig = 0.5 * (1.0 + tanh(gate_acc * 0.5))
-        return gate_acc * sig * up_acc
-    if act == "gelu_tanh":
-        inner = SQRT_2_OVER_PI * (gate_acc + 0.044715 * gate_acc * gate_acc * gate_acc)
-        return 0.5 * gate_acc * (1.0 + tanh(inner)) * up_acc
-    if act == "tanh":
-        return tanh(gate_acc) * up_acc
-    raise ValueError(f"unknown act {act!r}")
-
-
-def _fused_glu_kernel(x_ref, wg_ref, wu_ref, win_ref, o_ref,
-                      gate_acc, up_acc, *, n_k: int, act: str, table_kw):
-    k_step = pl.program_id(2)
-
-    @pl.when(k_step == 0)
-    def _init():
-        gate_acc[...] = jnp.zeros_like(gate_acc)
-        up_acc[...] = jnp.zeros_like(up_acc)
-
-    x = x_ref[...]
-    gate_acc[...] += jax.lax.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
-    up_acc[...] += jax.lax.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
-
-    @pl.when(k_step == n_k - 1)
-    def _done():
-        win = win_ref[...].astype(jnp.float32)
-        y = _epilogue(gate_acc[...], up_acc[...], win, act=act, table_kw=table_kw)
-        o_ref[...] = y.astype(o_ref.dtype)
+from .epilogue import (  # noqa: F401  (re-exported: shared datapath)
+    EPILOGUES,
+    TableSpec,
+    _cr_tanh_block,
+    glu_2d,
+)
 
 
 def fused_glu_2d(x, w_gate, w_up, windows, *, period: float, x_max: float,
                  saturation: float, act: str = "silu",
+                 lookup: str = "onehot",
                  block_m: int = 128, block_n: int = 128, block_k: int = 512,
                  interpret: bool = False):
     """out[M,N] = act_cr(x[M,K] @ w_gate[K,N]) * (x @ w_up). Dims must be
     divisible by the block shape (`ops.fused_glu` pads)."""
-    m, k = x.shape
-    k2, n = w_gate.shape
-    assert k == k2 and w_up.shape == (k, n)
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (x.shape, w_gate.shape)
-    depth = windows.shape[0]
-    n_k = k // block_k
-    table_kw = dict(inv_period=1.0 / period, depth=depth, x_max=x_max,
-                    saturation=saturation)
-    kernel = functools.partial(_fused_glu_kernel, n_k=n_k, act=act, table_kw=table_kw)
-    return pl.pallas_call(
-        kernel,
-        grid=(m // block_m, n // block_n, n_k),
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
-            pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
-            pl.BlockSpec((depth, 4), lambda i, j, s: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_m, block_n), jnp.float32),
-            pltpu.VMEM((block_m, block_n), jnp.float32),
-        ],
-        interpret=interpret,
-    )(x, w_gate, w_up, windows)
+    spec = TableSpec(period=period, depth=windows.shape[0], x_max=x_max,
+                     saturation=saturation)
+    return glu_2d(x, w_gate, w_up, windows, spec=spec, act=act, lookup=lookup,
+                  block_m=block_m, block_n=block_n, block_k=block_k,
+                  interpret=interpret)

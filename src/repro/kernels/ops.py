@@ -1,8 +1,22 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""jit'd public wrappers around the Pallas epilogue kernels.
 
 Handles: arbitrary leading dims (flattened to rows), padding to block
-multiples, dtype pass-through, and interpret-mode selection (CPU backend
-executes kernels in interpret mode; TPU compiles them).
+multiples, dtype pass-through, table selection per epilogue, and
+interpret-mode selection (CPU backend executes kernels in interpret
+mode; TPU compiles them).
+
+Public surface:
+  act(x, name)        one-pallas_call element-wise epilogue (any of
+                      ``epilogue.EPILOGUES``) — what the ActivationEngine
+                      dispatches to under ``use_kernel=True``
+  cr_act(x)           the ``tanh`` instance (back-compat name)
+  fused_glu(x, wg, wu) GLU matmuls fused with any epilogue
+
+Autodiff: Pallas forward kernels are wrapped in ``jax.custom_vjp`` whose
+backward recomputes the same math as pure jnp (the epilogues are plain
+traceable functions — one codepath, two lowerings). This is the flash-
+attention trade: no residuals from inside the kernel, a cheap recompute
+in the backward pass — which is what makes ``fuse_mlp`` trainable.
 """
 from __future__ import annotations
 
@@ -15,8 +29,9 @@ import numpy as np
 from repro.core import catmull_rom as cr
 from repro.core.activations import tanh_table
 
-from . import cr_act as _cr_act_mod
-from . import fused_glu as _fused_glu_mod
+from . import epilogue as epi
+
+EPILOGUES = epi.EPILOGUES
 
 
 def _interpret_default() -> bool:
@@ -27,13 +42,23 @@ def _pad_to(v: int, m: int) -> int:
     return (v + m - 1) // m * m
 
 
-@functools.partial(jax.jit, static_argnames=("period", "x_max", "saturation",
-                                             "lookup", "interpret",
-                                             "block_rows", "block_cols"))
-def _cr_act_impl(x, windows, *, period, x_max, saturation, lookup, interpret,
-                 block_rows, block_cols):
+def _resolve_table(table: cr.SplineTable | None, act: str) -> cr.SplineTable:
+    """Default table for an epilogue: the paper's flagship geometry
+    (x_max=4, depth=32; softplus widens per ``epilogue.table_for``)."""
+    return table or epi.table_for(act, 4.0, 32)
+
+
+# ---------------------------------------------------------------------------
+# element-wise epilogues
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("spec", "act", "lookup",
+                                             "interpret", "block_rows",
+                                             "block_cols"))
+def _act_impl(x, windows, *, spec, act, lookup, interpret, block_rows,
+              block_cols):
     orig_shape = x.shape
-    cols = orig_shape[-1]
+    cols = orig_shape[-1] if orig_shape else 1   # 0-d: single element
     rows = int(np.prod(orig_shape[:-1])) if len(orig_shape) > 1 else 1
     x2 = x.reshape(rows, cols)
     # pick blocks no larger than the (padded) array
@@ -42,34 +67,77 @@ def _cr_act_impl(x, windows, *, period, x_max, saturation, lookup, interpret,
     pr, pc = _pad_to(rows, br), _pad_to(cols, bc)
     if (pr, pc) != (rows, cols):
         x2 = jnp.pad(x2, ((0, pr - rows), (0, pc - cols)))
-    y = _cr_act_mod.cr_act_2d(
-        x2, windows, period=period, x_max=x_max,
-        saturation=saturation, lookup=lookup,
-        block_rows=br, block_cols=bc, interpret=interpret)
+    y = epi.elementwise_2d(x2, windows, spec=spec, act=act, lookup=lookup,
+                           block_rows=br, block_cols=bc, interpret=interpret)
     return y[:rows, :cols].reshape(orig_shape)
+
+
+def _act_ref_math(static, x, windows):
+    """jnp recompute of the epilogue for the backward pass. ``take``
+    lookup is numerically identical to ``onehot`` (a one-hot f32 dot
+    selects the same window values exactly) and shape-agnostic."""
+    spec, act_name = static[0], static[1]
+    fn = epi.make_epilogue(act_name, spec, "take")
+    return fn(x.astype(jnp.float32), windows).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _act_core(static, x, windows):
+    spec, act_name, lookup, interpret, br, bc = static
+    return _act_impl(x, windows, spec=spec, act=act_name, lookup=lookup,
+                     interpret=interpret, block_rows=br, block_cols=bc)
+
+
+def _act_core_fwd(static, x, windows):
+    return _act_core(static, x, windows), (x, windows)
+
+
+def _act_core_bwd(static, res, g):
+    x, windows = res
+    _, vjp = jax.vjp(functools.partial(_act_ref_math, static), x, windows)
+    return vjp(g)
+
+
+_act_core.defvjp(_act_core_fwd, _act_core_bwd)
+
+
+def act(x, name: str = "tanh", table: cr.SplineTable | None = None, *,
+        lookup: str = "onehot", interpret: bool | None = None,
+        block_rows: int = epi.DEFAULT_BLOCK_ROWS,
+        block_cols: int = epi.DEFAULT_BLOCK_COLS):
+    """Any spline epilogue as a SINGLE Pallas kernel launch.
+
+    ``table`` defaults to the epilogue's own default (the paper's
+    flagship tanh table; the widened softplus residual table)."""
+    table = _resolve_table(table, name)
+    if interpret is None:
+        interpret = _interpret_default()
+    windows = jnp.asarray(table.windows, jnp.float32)
+    static = (epi.TableSpec.of(table), name, lookup, interpret,
+              block_rows, block_cols)
+    return _act_core(static, x, windows)
 
 
 def cr_act(x, table: cr.SplineTable | None = None, *, lookup: str = "onehot",
            interpret: bool | None = None,
-           block_rows: int = _cr_act_mod.DEFAULT_BLOCK_ROWS,
-           block_cols: int = _cr_act_mod.DEFAULT_BLOCK_COLS):
+           block_rows: int = epi.DEFAULT_BLOCK_ROWS,
+           block_cols: int = epi.DEFAULT_BLOCK_COLS):
     """CR-spline tanh via the Pallas kernel. ``table`` defaults to the
     paper's flagship (x_max=4, depth=32)."""
-    table = table or tanh_table(4.0, 32)
-    if interpret is None:
-        interpret = _interpret_default()
-    windows = jnp.asarray(table.windows, jnp.float32)
-    return _cr_act_impl(x, windows, period=table.period, x_max=table.x_max,
-                        saturation=table.saturation, lookup=lookup,
-                        interpret=interpret, block_rows=block_rows,
-                        block_cols=block_cols)
+    return act(x, "tanh", table or tanh_table(4.0, 32), lookup=lookup,
+               interpret=interpret, block_rows=block_rows,
+               block_cols=block_cols)
 
 
-@functools.partial(jax.jit, static_argnames=("period", "x_max", "saturation",
-                                             "act", "interpret",
-                                             "block_m", "block_n", "block_k"))
-def _fused_glu_impl(x, w_gate, w_up, windows, *, period, x_max, saturation,
-                    act, interpret, block_m, block_n, block_k):
+# ---------------------------------------------------------------------------
+# fused GLU
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("spec", "act", "lookup",
+                                             "interpret", "block_m",
+                                             "block_n", "block_k"))
+def _fused_glu_impl(x, w_gate, w_up, windows, *, spec, act, lookup, interpret,
+                    block_m, block_n, block_k):
     orig_shape = x.shape
     k = orig_shape[-1]
     m = int(np.prod(orig_shape[:-1])) if len(orig_shape) > 1 else 1
@@ -85,22 +153,54 @@ def _fused_glu_impl(x, w_gate, w_up, windows, *, period, x_max, saturation,
     if (pk, pn) != (k, n):
         wg = jnp.pad(wg, ((0, pk - k), (0, pn - n)))
         wu = jnp.pad(wu, ((0, pk - k), (0, pn - n)))
-    y = _fused_glu_mod.fused_glu_2d(
-        x2, wg, wu, windows, period=period, x_max=x_max,
-        saturation=saturation, act=act,
-        block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    y = epi.glu_2d(x2, wg, wu, windows, spec=spec, act=act, lookup=lookup,
+                   block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
     return y[:m, :n].reshape(orig_shape[:-1] + (n,))
 
 
+def _fused_glu_ref_math(static, x, w_gate, w_up, windows):
+    """Unfused jnp recompute for the backward pass: f32 matmuls + the
+    same (traceable) epilogue the kernel applies to its accumulator."""
+    spec, act_name = static[0], static[1]
+    fn = epi.make_epilogue(act_name, spec, "take")
+    xf = x.astype(jnp.float32)
+    gate = xf @ w_gate.astype(jnp.float32)
+    up = xf @ w_up.astype(jnp.float32)
+    return (fn(gate, windows) * up).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused_glu_core(static, x, w_gate, w_up, windows):
+    spec, act_name, lookup, interpret, bm, bn, bk = static
+    return _fused_glu_impl(x, w_gate, w_up, windows, spec=spec, act=act_name,
+                           lookup=lookup, interpret=interpret,
+                           block_m=bm, block_n=bn, block_k=bk)
+
+
+def _fused_glu_core_fwd(static, x, w_gate, w_up, windows):
+    return (_fused_glu_core(static, x, w_gate, w_up, windows),
+            (x, w_gate, w_up, windows))
+
+
+def _fused_glu_core_bwd(static, res, g):
+    x, w_gate, w_up, windows = res
+    _, vjp = jax.vjp(functools.partial(_fused_glu_ref_math, static),
+                     x, w_gate, w_up, windows)
+    return vjp(g)
+
+
+_fused_glu_core.defvjp(_fused_glu_core_fwd, _fused_glu_core_bwd)
+
+
 def fused_glu(x, w_gate, w_up, table: cr.SplineTable | None = None, *,
-              act: str = "silu", interpret: bool | None = None,
+              act: str = "silu", lookup: str = "onehot",
+              interpret: bool | None = None,
               block_m: int = 128, block_n: int = 128, block_k: int = 512):
-    """act_cr(x @ w_gate) * (x @ w_up) in one fused Pallas kernel."""
-    table = table or tanh_table(4.0, 32)
+    """epilogue(x @ w_gate) * (x @ w_up) in one fused Pallas kernel."""
+    table = _resolve_table(table, act)
     if interpret is None:
         interpret = _interpret_default()
     windows = jnp.asarray(table.windows, jnp.float32)
-    return _fused_glu_impl(x, w_gate, w_up, windows, period=table.period,
-                           x_max=table.x_max, saturation=table.saturation,
-                           act=act, interpret=interpret, block_m=block_m,
-                           block_n=block_n, block_k=block_k)
+    static = (epi.TableSpec.of(table), act, lookup, interpret,
+              block_m, block_n, block_k)
+    return _fused_glu_core(static, x, w_gate, w_up, windows)

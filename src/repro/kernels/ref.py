@@ -2,23 +2,49 @@
 
 These are the ground truth the Pallas kernels are validated against
 (same math, no tiling): tests sweep shapes/dtypes and assert_allclose.
+``epilogue_ref`` mirrors ``epilogue.make_epilogue`` term for term — one
+float CR-tanh interpolation plus the identity wiring per epilogue.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import catmull_rom as cr
 from repro.core.activations import SQRT_2_OVER_PI
 
 
-def cr_act_ref(x, table: cr.SplineTable):
-    """Oracle for cr_act: float CR interpolation (odd, saturating)."""
-    y = cr.interpolate(table, x.astype(jnp.float32))
+def _tanh_ref(v, table: cr.SplineTable):
+    return cr.interpolate(table, v)
+
+
+def epilogue_ref(act: str, x, table: cr.SplineTable):
+    """Oracle for one spline epilogue on an f32 array. ``table`` is the
+    epilogue's own table (tanh table for the tanh family; the even
+    softplus residual table for softplus — see ``epilogue.table_for``)."""
+    if act == "tanh":
+        return _tanh_ref(x, table)
+    if act == "sigmoid":
+        return 0.5 * (1.0 + _tanh_ref(x * 0.5, table))
+    if act == "silu":
+        return x * (0.5 * (1.0 + _tanh_ref(x * 0.5, table)))
+    if act == "gelu_tanh":
+        inner = SQRT_2_OVER_PI * (x + 0.044715 * x ** 3)
+        return 0.5 * x * (1.0 + _tanh_ref(inner, table))
+    if act == "softplus":
+        return jax.nn.relu(x) + cr.interpolate(table, jnp.abs(x), odd=False)
+    raise ValueError(act)
+
+
+def act_ref(x, act: str, table: cr.SplineTable):
+    """Oracle for ops.act: float CR epilogue in f32, cast back."""
+    y = epilogue_ref(act, x.astype(jnp.float32), table)
     return y.astype(x.dtype)
 
 
-def _tanh_ref(v, table: cr.SplineTable):
-    return cr.interpolate(table, v)
+def cr_act_ref(x, table: cr.SplineTable):
+    """Oracle for cr_act: float CR interpolation (odd, saturating)."""
+    return act_ref(x, "tanh", table)
 
 
 def fused_glu_ref(x, w_gate, w_up, table: cr.SplineTable, act: str = "silu"):
@@ -26,13 +52,5 @@ def fused_glu_ref(x, w_gate, w_up, table: cr.SplineTable, act: str = "silu"):
     xf = x.astype(jnp.float32)
     gate = xf @ w_gate.astype(jnp.float32)
     up = xf @ w_up.astype(jnp.float32)
-    if act == "silu":
-        y = gate * (0.5 * (1.0 + _tanh_ref(gate * 0.5, table))) * up
-    elif act == "gelu_tanh":
-        inner = SQRT_2_OVER_PI * (gate + 0.044715 * gate ** 3)
-        y = 0.5 * gate * (1.0 + _tanh_ref(inner, table)) * up
-    elif act == "tanh":
-        y = _tanh_ref(gate, table) * up
-    else:
-        raise ValueError(act)
+    y = epilogue_ref(act, gate, table) * up
     return y.astype(x.dtype)

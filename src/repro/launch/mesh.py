@@ -14,11 +14,21 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_auto(shape: tuple, axes: tuple):
+    """jax.make_mesh with Auto axis types, across jax versions: 0.4.x has
+    no jax.sharding.AxisType (all axes are implicitly Auto); newer jax
+    accepts it explicitly."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_auto(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -26,8 +36,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // data))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_auto((data, model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple:

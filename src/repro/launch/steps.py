@@ -11,8 +11,6 @@ the same builder serves 1-device smoke tests and the 512-chip dry-run.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -48,8 +46,25 @@ def opt_state_axes(params_axes):
     }
 
 
-def make_train_step(cfg: ModelConfig, hyper: TrainHyper = TrainHyper()):
+def _make_engine(cfg: ModelConfig) -> ActivationEngine:
+    """Engine for a step function, with the fuse_mlp contract enforced at
+    build time: a config that asks for fusion but can't get it (no GLU,
+    non-epilogue act, non-CR engine) would otherwise silently fall back
+    to the unfused path and report fiction in the dry-run roofline."""
     engine = ActivationEngine(cfg.activation)
+    if cfg.fuse_mlp:
+        from repro.models.layers import mlp_fusable
+        if not mlp_fusable(cfg, engine):
+            raise ValueError(
+                f"{cfg.name}: fuse_mlp=True requires glu=True, mlp_act in "
+                f"kernels.epilogue.EPILOGUES and a CR activation engine "
+                f"(got glu={cfg.glu}, mlp_act={cfg.mlp_act!r}, "
+                f"impl={cfg.activation.impl!r})")
+    return engine
+
+
+def make_train_step(cfg: ModelConfig, hyper: TrainHyper = TrainHyper()):
+    engine = _make_engine(cfg)
 
     def grads_of(params, batch):
         def loss_of(p):
@@ -113,7 +128,7 @@ def make_train_step(cfg: ModelConfig, hyper: TrainHyper = TrainHyper()):
 
 
 def make_prefill_step(cfg: ModelConfig, capacity: int | None = None):
-    engine = ActivationEngine(cfg.activation)
+    engine = _make_engine(cfg)
 
     def prefill_step(params, batch):
         return M.prefill_fn(params, batch, cfg, engine, capacity=capacity)
@@ -122,7 +137,7 @@ def make_prefill_step(cfg: ModelConfig, capacity: int | None = None):
 
 
 def make_serve_step(cfg: ModelConfig):
-    engine = ActivationEngine(cfg.activation)
+    engine = _make_engine(cfg)
 
     def serve_step(params, batch, cache):
         return M.decode_fn(params, batch, cache, cfg, engine)

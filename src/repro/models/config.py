@@ -40,6 +40,11 @@ class ModelConfig:
     # FFN
     mlp_act: str = "silu"           # silu (SwiGLU) | gelu_tanh (plain MLP w/ GLU)
     glu: bool = True                # gated (SwiGLU/GeGLU) vs plain 2-layer MLP
+    fuse_mlp: bool = False          # route GLU FFNs (incl. the MoE shared
+                                    # expert) through the fused Pallas
+                                    # matmul+spline-epilogue kernel; needs
+                                    # glu=True, a CR activation engine, and
+                                    # mlp_act in kernels.epilogue.EPILOGUES
 
     # MoE
     n_experts: int = 0

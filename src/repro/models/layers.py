@@ -11,7 +11,6 @@ scan over Q chunks) so 32k-token prefill lowers with bounded temps.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any
 
@@ -308,14 +307,33 @@ def init_mlp(key, cfg: ModelConfig):
     return p
 
 
+def mlp_fusable(cfg: ModelConfig, engine: ActivationEngine) -> bool:
+    """fuse_mlp preconditions: a gated FFN whose activation exists as a
+    spline epilogue, under a CR engine (the fused kernel IS the CR
+    spline — fusing under a different backend would silently change
+    numerics). Checked here and at step-build time (launch/steps.py)."""
+    from repro.kernels.epilogue import EPILOGUES  # lazy: avoid cycle
+    return (cfg.fuse_mlp and cfg.glu and cfg.mlp_act in EPILOGUES
+            and engine.cfg.impl == "cr")
+
+
 def apply_mlp(params, x, cfg: ModelConfig, engine: ActivationEngine):
     cdt = dtype_of(cfg)
-    up = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(cdt))
-    if cfg.glu:
-        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(cdt))
-        h = engine(cfg.mlp_act, gate) * up
+    if mlp_fusable(cfg, engine):
+        # one kernel: gate/up matmuls + spline epilogue on the f32
+        # accumulator — the gate projection never round-trips to HBM.
+        from repro.kernels import epilogue as epi, ops as kernel_ops
+        table = epi.table_for(cfg.mlp_act, engine.cfg.x_max, engine.cfg.depth)
+        h = kernel_ops.fused_glu(x, params["w_gate"].astype(cdt),
+                                 params["w_up"].astype(cdt), table,
+                                 act=cfg.mlp_act)
     else:
-        h = engine(cfg.mlp_act, up)
+        up = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(cdt))
+        if cfg.glu:
+            gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(cdt))
+            h = engine(cfg.mlp_act, gate) * up
+        else:
+            h = engine(cfg.mlp_act, up)
     h = lc(h, "batch", "seq", "act_mlp")
     return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(cdt))
 

@@ -72,10 +72,11 @@ def test_elastic_restore_onto_different_sharding(tmp_path, tree):
     shardings the new (resized) mesh resolves — single-device CPU stands
     in for 'different mesh' by passing explicit shardings."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import make_mesh_auto
     st = CheckpointStore(tmp_path)
     st.save(2, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_auto((1,), ("data",))
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
     out, _ = st.restore(2, tree, shardings=sh)
     w = out["params"]["w"]

@@ -189,3 +189,23 @@ class TestPaperTables:
         y1 = np.asarray(interpolate_fixed(ftab, xq))
         y2 = np.asarray(interpolate_fixed(ftab, xq))
         np.testing.assert_array_equal(y1, y2)
+
+
+class TestFixedDatapathDepths:
+    """Every Q2.13 table geometry evaluates: depth 32/64 on the int32
+    split MAC, depth 8/16 (t_bits 11/12, basis lattice > 32 bits) via
+    the int64 wide-lattice fallback — regression for the int32 rewrite
+    dropping the wide tables."""
+
+    @pytest.mark.parametrize("depth", [8, 16, 32, 64])
+    def test_all_depths_evaluate_without_global_x64(self, depth):
+        assert not jax.config.jax_enable_x64
+        ftab = build_fixed_table(np.tanh, 4.0, depth)
+        xs = np.linspace(-4, 3.999, 1024)
+        xq = quantize(jnp.asarray(xs, jnp.float32))
+        y = np.asarray(dequantize(interpolate_fixed(ftab, xq)))
+        # within a coarse spline bound of true tanh, odd and saturating
+        assert np.max(np.abs(y - np.tanh(xs))) < 0.01
+        np.testing.assert_array_equal(
+            np.asarray(interpolate_fixed(ftab, xq)),
+            np.asarray(interpolate_fixed(ftab, xq)))

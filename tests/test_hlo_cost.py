@@ -27,7 +27,7 @@ def test_single_matmul_flops_match_xla():
     c = _compile(lambda x, w: x @ w, SPEC, SPEC)
     t = hlo_cost.analyze_compiled(c)
     assert t.flops == pytest.approx(MATMUL_FLOPS, rel=0.01)
-    xla = c.cost_analysis()["flops"]
+    xla = hlo_cost.xla_cost_analysis(c)["flops"]
     assert t.flops == pytest.approx(xla, rel=0.05)
 
 
@@ -48,7 +48,7 @@ def test_scan_flops_equal_unrolled():
     assert t_scan.flops == pytest.approx(6 * MATMUL_FLOPS, rel=0.02)
     assert t_scan.flops == pytest.approx(t_unroll.flops, rel=0.02)
     # the raw XLA number is 6x off — this is the bug we correct
-    xla = _compile(scanned, SPEC, SPEC).cost_analysis()["flops"]
+    xla = hlo_cost.xla_cost_analysis(_compile(scanned, SPEC, SPEC))["flops"]
     assert xla == pytest.approx(MATMUL_FLOPS, rel=0.02)
 
 
