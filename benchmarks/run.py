@@ -10,13 +10,16 @@ Benches:
     activations     derived-activation accuracy (beyond-paper)
     kernel_bench    Pallas kernel vs oracle timings + VMEM budget
     roofline_table  §Roofline summary from the dry-run artifacts
+    serve_bench     continuous-batching engine: scan-vs-python decode,
+                    offered-load sweep (p50/p99 latency)
 """
 from __future__ import annotations
 
 import sys
 import time
 
-from . import activations, kernel_bench, roofline_table, table1_2, table3
+from . import (activations, kernel_bench, roofline_table, serve_bench,
+               table1_2, table3)
 
 
 def _roofline_both():
@@ -33,6 +36,7 @@ BENCHES = {
     "activations": lambda: activations.run(),
     "kernel_bench": lambda: kernel_bench.run(),
     "roofline_table": _roofline_both,
+    "serve_bench": lambda: serve_bench.run(),
 }
 
 

@@ -1,13 +1,15 @@
-"""Batched serving launcher: prefill a batch of prompts, then decode.
+"""Batched serving launcher on the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --batch 4 --prompt-len 64 --gen 32
 
-The serving path exercises the same step functions the 512-chip dry-run
-lowers (prefill_step / serve_step): prompts are prefilling into a KV (or
-SSM/conv) cache sized by `cache_capacity` (ring-buffer under a sliding
-window), then tokens decode one at a time with the cache donated in/out.
-Sampling: greedy or temperature; per-request stop handling.
+`serve_batch` is a thin compatibility wrapper over `repro.serve`'s
+ServeEngine: prompts become engine requests, decode runs as in-jit
+`lax.scan` chunks with on-device sampling, and the returned tokens/stats
+match the old lockstep contract. The legacy per-token python loop is
+kept as `backend="python"` — it is the benchmark baseline the scan path
+is measured against, and the only path for multi-codebook (musicgen)
+decode, which is not slot-batched.
 """
 from __future__ import annotations
 
@@ -26,6 +28,7 @@ from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.parallel import partition as part
+from repro.serve import EngineConfig, ServeEngine
 
 
 def sample_logits(key, logits, temperature: float):
@@ -40,7 +43,9 @@ class ServeStats:
     decode_s: float
     n_prompts: int
     prompt_len: int
-    generated: int
+    generated: int          # tokens emitted per prompt (incl. prefill sample)
+    decode_steps: int       # sequential decode steps actually run
+    decode_tokens: int      # tokens emitted by decode steps
 
     @property
     def prefill_tokens_per_s(self):
@@ -48,13 +53,17 @@ class ServeStats:
 
     @property
     def decode_tokens_per_s(self):
-        return self.n_prompts * self.generated / self.decode_s
+        # gen=1 workloads run zero decode steps (first token comes from
+        # the prefill logits), leaving decode_s exactly 0.0
+        return self.decode_tokens / self.decode_s if self.decode_s else 0.0
 
 
-def serve_batch(cfg, params, prompts, gen_tokens: int, *,
-                temperature: float = 0.0, seed: int = 0,
-                capacity: int | None = None):
-    """prompts: int32 [B, S(, K)]. Returns (tokens [B, gen(, K)], stats)."""
+def _serve_batch_python(cfg, params, prompts, gen_tokens: int, *,
+                        temperature: float = 0.0, seed: int = 0,
+                        capacity: int | None = None):
+    """Lockstep per-token python loop: one jitted decode dispatch + host
+    sync per token. Exactly gen_tokens - 1 decode steps run (the first
+    token is sampled from the prefill logits; no trailing wasted step)."""
     B, S = prompts.shape[0], prompts.shape[1]
     capacity = capacity or M.cache_capacity(cfg, S + gen_tokens)
     prefill = jax.jit(steps_mod.make_prefill_step(cfg, capacity=capacity))
@@ -65,22 +74,60 @@ def serve_batch(cfg, params, prompts, gen_tokens: int, *,
     logits = jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
 
+    # fold the key before first use: sampling with the root key and then
+    # feeding the same key to split() would correlate the first sample
+    # with the rest of the stream
     key = jax.random.key(seed)
+    key, sub = jax.random.split(key)
     multi = cfg.n_codebooks > 1
-    out = []
+    tok = sample_logits(sub, logits, temperature)          # [B(, K)]
+    out = [tok]
     t0 = time.perf_counter()
-    tok = sample_logits(key, logits, temperature)          # [B(, K)]
-    for i in range(gen_tokens):
-        out.append(tok)
+    for _ in range(gen_tokens - 1):
         step_tok = tok[:, None] if not multi else tok[:, None, :]
         key, sub = jax.random.split(key)
         logits, cache = decode(params, {"tokens": step_tok}, cache)
         tok = sample_logits(sub, logits, temperature)
+        out.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.perf_counter() - t0
 
     tokens = jnp.stack(out, axis=1)                        # [B, gen(, K)]
-    return tokens, ServeStats(t_prefill, t_decode, B, S, gen_tokens)
+    return tokens, ServeStats(t_prefill, t_decode, B, S, gen_tokens,
+                              decode_steps=gen_tokens - 1,
+                              decode_tokens=B * (gen_tokens - 1))
+
+
+def serve_batch(cfg, params, prompts, gen_tokens: int, *,
+                temperature: float = 0.0, seed: int = 0,
+                capacity: int | None = None, backend: str = "engine",
+                slots: int | None = None, chunk: int = 8):
+    """prompts: int32 [B, S(, K)]. Returns (tokens [B, gen(, K)], stats).
+
+    backend "engine": continuous-batching ServeEngine (in-jit scan
+    decode); "python": legacy per-token loop. Multi-codebook archs and
+    an explicit `capacity` (the engine sizes its own per-slot cache from
+    S + gen_tokens) force the python path, which honors it exactly."""
+    B, S = prompts.shape[0], prompts.shape[1]
+    if cfg.n_codebooks > 1 or backend == "python" or capacity is not None:
+        return _serve_batch_python(cfg, params, prompts, gen_tokens,
+                                   temperature=temperature, seed=seed,
+                                   capacity=capacity)
+
+    ecfg = EngineConfig(slots=slots or B, max_prompt_len=S,
+                        max_len=S + gen_tokens,
+                        chunk=max(1, min(chunk, gen_tokens - 1) or 1),
+                        seed=seed)
+    engine = ServeEngine(cfg, params, ecfg)
+    for b in range(B):
+        engine.submit(np.asarray(prompts[b]), gen_tokens,
+                      temperature=temperature)
+    done = engine.run()
+    tokens = jnp.asarray([c.tokens for c in done], jnp.int32)  # [B, gen]
+    st = engine.stats
+    return tokens, ServeStats(st.prefill_s, st.decode_s, B, S, gen_tokens,
+                              decode_steps=st.decode_steps,
+                              decode_tokens=st.decode_tokens)
 
 
 def main(argv=None):
@@ -94,6 +141,13 @@ def main(argv=None):
     p.add_argument("--activation", default=None)
     p.add_argument("--model-parallel", type=int, default=1)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--backend", choices=("engine", "python"),
+                   default="engine")
+    p.add_argument("--slots", type=int, default=None,
+                   help="decode slots (engine backend; default = batch)")
+    p.add_argument("--chunk", type=int, default=8,
+                   help="in-jit decode steps per dispatch (engine backend)")
+    p.add_argument("--json", default=None, help="write stats JSON here")
     args = p.parse_args(argv)
 
     cfg = registry.get(args.arch, smoke=args.smoke)
@@ -103,7 +157,7 @@ def main(argv=None):
                                                 impl=args.activation))
     mesh = make_host_mesh(1, args.model_parallel)
     print(f"[serve] arch={cfg.name} act={cfg.activation.tag()} "
-          f"mesh={dict(mesh.shape)}")
+          f"backend={args.backend} mesh={dict(mesh.shape)}")
 
     with part.axis_rules(mesh):
         params, _ = M.materialize_params(cfg, seed=args.seed)
@@ -119,13 +173,18 @@ def main(argv=None):
         prompts = pipe(0)["tokens"]
         tokens, stats = serve_batch(cfg, params, prompts, args.gen,
                                     temperature=args.temperature,
-                                    seed=args.seed)
+                                    seed=args.seed, backend=args.backend,
+                                    slots=args.slots, chunk=args.chunk)
 
     print(f"[serve] prefill {stats.prefill_tokens_per_s:,.0f} tok/s "
           f"({stats.prefill_s*1e3:.0f} ms), decode "
           f"{stats.decode_tokens_per_s:,.0f} tok/s "
-          f"({stats.decode_s*1e3:.0f} ms for {args.gen} steps x {args.batch} seqs)")
+          f"({stats.decode_s*1e3:.0f} ms for {stats.decode_steps} steps, "
+          f"{args.batch} seqs)")
     print("[serve] sample output tokens:", np.asarray(tokens)[0, :16].tolist())
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(dataclasses.asdict(stats), f, indent=2)
     return stats
 
 

@@ -127,7 +127,17 @@ def make_train_step(cfg: ModelConfig, hyper: TrainHyper = TrainHyper()):
     return train_step
 
 
+def make_engine(cfg: ModelConfig) -> ActivationEngine:
+    """Public alias: the validated activation engine for a config (the
+    serve engine builds its own in-jit decode scan around decode_fn)."""
+    return _make_engine(cfg)
+
+
 def make_prefill_step(cfg: ModelConfig, capacity: int | None = None):
+    """Prefill step. If the batch carries a `lengths` [B] entry the
+    prompts are treated as ragged/right-padded (bucketed admission in
+    the serve engine): logits come from each row's last real token and
+    the returned cache is per-slot (cur [B], k_pos [B, W])."""
     engine = _make_engine(cfg)
 
     def prefill_step(params, batch):

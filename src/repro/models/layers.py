@@ -269,18 +269,20 @@ def _flash_padded(q, k, v, q_pos, k_pos, cfg: ModelConfig, engine, qc: int):
 
 def decode_attention(q, k_cache, v_cache, q_pos, k_pos, cfg: ModelConfig, engine):
     """Single-token attention over the cache. q: [B, 1, H, hd];
-    k/v_cache: [B, W, KV, hd]; k_pos: [W] absolute positions (-1 empty)."""
+    k/v_cache: [B, W, KV, hd]; q_pos: [B] per-slot query positions;
+    k_pos: [B, W] per-slot absolute key positions (-1 empty). A lockstep
+    batch is the special case where every row agrees."""
     B, _, H, hd = q.shape
     KV = k_cache.shape[2]
     G = H // KV
     qg = q.reshape(B, KV, G, hd).astype(jnp.float32) / math.sqrt(hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache.astype(jnp.float32))
-    mask = (k_pos <= q_pos) & (k_pos >= 0)
+    mask = (k_pos <= q_pos[:, None]) & (k_pos >= 0)         # [B, W]
     if cfg.sliding_window is not None:
-        mask &= k_pos > q_pos - cfg.sliding_window
+        mask &= k_pos > q_pos[:, None] - cfg.sliding_window
     if cfg.logit_softcap:
         s = cfg.logit_softcap * engine.tanh(s / cfg.logit_softcap)
-    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
     return out.reshape(B, 1, H, hd).astype(q.dtype)
@@ -619,8 +621,10 @@ def init_block(key, cfg: ModelConfig):
 class BlockIO:
     """What a block consumes/produces besides the hidden state."""
     positions: Any = None        # [B?, S] or [B, S, 3] (mrope)
-    q_pos: Any = None            # [S] absolute query positions
-    k_pos: Any = None            # [S or W] absolute key positions
+    q_pos: Any = None            # [S] (train/prefill) or [B] (decode,
+                                 # per-slot) absolute query positions
+    k_pos: Any = None            # [S] (train/prefill) or [B, W] (decode,
+                                 # per-slot) absolute key positions
     mode: str = "train"          # train | prefill | decode
     cache: dict | None = None    # per-layer cache slices (decode/prefill out)
     aux_loss: Any = 0.0
@@ -631,10 +635,11 @@ def _attn_branch(p, xn, io: BlockIO, cfg: ModelConfig, engine):
     if io.mode == "decode":
         q, k_new, v_new = _qkv(p, xn, io.positions, cfg)
         kc, vc = io.cache["k"], io.cache["v"]                  # [B, W, KV, hd]
-        W = kc.shape[1]
-        slot = io.cache["slot"]                                # scalar int32
-        kc = jax.lax.dynamic_update_slice(kc, k_new, (0, slot, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v_new, (0, slot, 0, 0))
+        B = kc.shape[0]
+        slot = io.cache["slot"]                                # [B] int32
+        rows = jnp.arange(B)
+        kc = kc.at[rows, slot].set(k_new[:, 0])
+        vc = vc.at[rows, slot].set(v_new[:, 0])
         ctx = decode_attention(q, kc, vc, io.q_pos, io.k_pos, cfg, engine)
         new_cache = {"k": kc, "v": vc}
     else:

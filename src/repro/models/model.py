@@ -8,7 +8,6 @@ in <1s) and remat policy applies per block.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -137,9 +136,17 @@ def run_stack_train(params, x, batch, cfg: ModelConfig, engine: ActivationEngine
     return x, aux / cfg.n_layers
 
 
-def run_stack_prefill(params, x, batch, cfg: ModelConfig, engine, capacity: int):
+def run_stack_prefill(params, x, batch, cfg: ModelConfig, engine, capacity: int,
+                      lengths=None):
     """Returns (x, stacked cache). Cache k/v laid out ring-style when a
-    sliding window bounds capacity."""
+    sliding window bounds capacity.
+
+    With `lengths` (int32 [B]) the prefill is *ragged*: each row's prompt
+    occupies positions [0, lengths[b]) of the (right-padded) token block;
+    the returned cache is per-slot (`cur` [B], `k_pos` [B, W]) and pad
+    positions are excluded from it (k_pos = -1). Causality means pad
+    tokens never contaminate real rows' k/v — only trailing SSM/conv
+    states, so ragged prefill of stateful archs requires lengths == S."""
     B, S = x.shape[0], x.shape[1]
     io_template = dict(
         positions=_positions_for(batch, cfg, S),
@@ -153,18 +160,26 @@ def run_stack_prefill(params, x, batch, cfg: ModelConfig, engine, capacity: int)
         out_cache = {}
         for name, val in cache.items():
             if name in ("k", "v"):
-                out_cache[name] = _prefill_kv_to_cache(val, capacity, S)
+                out_cache[name] = (
+                    _prefill_kv_to_cache(val, capacity, S) if lengths is None
+                    else _prefill_kv_to_cache_ragged(val, capacity, lengths))
             else:
                 out_cache[name] = val
         return x, out_cache
 
     x, caches = jax.lax.scan(scan_body, x, params["blocks"])
-    slots = _prefill_slot_positions(capacity, S)
-    cache = {
-        "layers": caches,
-        "cur": jnp.int32(S),
-        "k_pos": slots,
-    }
+    if lengths is None:
+        cache = {
+            "layers": caches,
+            "cur": jnp.int32(S),
+            "k_pos": _prefill_slot_positions(capacity, S),
+        }
+    else:
+        cache = {
+            "layers": caches,
+            "cur": lengths.astype(jnp.int32),
+            "k_pos": _prefill_slot_positions_ragged(capacity, lengths),
+        }
     return x, cache
 
 
@@ -181,6 +196,28 @@ def _prefill_kv_to_cache(kv, capacity: int, S: int):
     return jnp.take(last, i, axis=1)
 
 
+def _ragged_ring_positions(capacity: int, lengths):
+    """Absolute position held by each ring slot after a ragged prefill.
+
+    Slot j of row b holds the unique position p in
+    [max(0, len_b - W), len_b) with p % W == j; `valid` marks slots that
+    hold a real (non-pad, non-evicted) position. Returns (p [B,W], valid)."""
+    W = capacity
+    j = jnp.arange(W, dtype=jnp.int32)[None, :]
+    start = jnp.maximum(0, lengths - W).astype(jnp.int32)[:, None]  # [B,1]
+    p = start + ((j - start) % W)
+    return p, p < lengths[:, None]
+
+
+def _prefill_kv_to_cache_ragged(kv, capacity: int, lengths):
+    """[B,S,KV,hd] + lengths [B] -> [B,W,KV,hd] per-row ring cache holding
+    the last min(W, len_b) *real* tokens of each row (pads excluded)."""
+    p, valid = _ragged_ring_positions(capacity, lengths)
+    idx = jnp.minimum(p, kv.shape[1] - 1)                  # clamp for gather
+    out = jnp.take_along_axis(kv, idx[:, :, None, None], axis=1)
+    return jnp.where(valid[:, :, None, None], out, jnp.zeros((), out.dtype))
+
+
 def _prefill_slot_positions(capacity: int, S: int):
     W = capacity
     j = jnp.arange(W, dtype=jnp.int32)
@@ -189,22 +226,41 @@ def _prefill_slot_positions(capacity: int, S: int):
     return (S - W) + ((j - (S - W)) % W)
 
 
+def _prefill_slot_positions_ragged(capacity: int, lengths):
+    p, valid = _ragged_ring_positions(capacity, lengths)
+    return jnp.where(valid, p, -1)
+
+
 def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
-    """One-token step. x: [B,1,d]. Returns (x, new_cache)."""
+    """One-token step. x: [B,1,d]. Returns (x, new_cache).
+
+    Cache contract: `cur` is either a scalar (lockstep batch — every row
+    at the same position) or int32 [B] (per-slot — continuous batching,
+    each row independent); `k_pos` correspondingly [W] or [B, W]. The
+    returned cache preserves the structure it was given, so jit-donated
+    serving loops stay shape-stable."""
+    B = x.shape[0]
     cur = cache["cur"]
+    per_slot = jnp.ndim(cur) > 0
+    cur_b = cur if per_slot else jnp.broadcast_to(cur, (B,))       # [B]
     k_pos_vec = cache.get("k_pos")
-    W = k_pos_vec.shape[0] if k_pos_vec is not None else 0
-    slot = (cur % W).astype(jnp.int32) if W else jnp.int32(0)
+    W = k_pos_vec.shape[-1] if k_pos_vec is not None else 0
+    slot = (cur_b % W).astype(jnp.int32) if W else jnp.zeros((B,), jnp.int32)
 
     if cfg.rope_kind == "mrope" and "mrope_positions" in batch:
         positions = batch["mrope_positions"]
     else:
-        positions = jnp.reshape(cur, (1, 1)).astype(jnp.int32)
+        positions = cur_b[:, None].astype(jnp.int32)               # [B, 1]
         if cfg.rope_kind == "mrope":
-            positions = jnp.broadcast_to(positions[..., None], (1, 1, 3))
+            # text-only decode: all three rope sections advance together,
+            # per slot (B > 1 rows may sit at different positions)
+            positions = jnp.broadcast_to(positions[..., None], (B, 1, 3))
 
     if k_pos_vec is not None:
-        k_pos_new = jnp.where(jnp.arange(W) == slot, cur, k_pos_vec)
+        kp = k_pos_vec if k_pos_vec.ndim == 2 \
+            else jnp.broadcast_to(k_pos_vec[None, :], (B, W))
+        k_pos_new = jnp.where(jnp.arange(W)[None, :] == slot[:, None],
+                              cur_b[:, None], kp)                  # [B, W]
     else:
         k_pos_new = None
 
@@ -212,7 +268,7 @@ def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
         layer_params, layer_cache = inp
         lcache = dict(layer_cache)
         lcache["slot"] = slot
-        io = BlockIO(mode="decode", positions=positions, q_pos=cur,
+        io = BlockIO(mode="decode", positions=positions, q_pos=cur_b,
                      k_pos=k_pos_new, cache=lcache)
         x, new_cache, _ = apply_block(layer_params, x, io, cfg, engine)
         # preserve untouched entries (e.g. nothing for pure attn)
@@ -223,7 +279,8 @@ def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
         scan_body, x, (params["blocks"], cache["layers"]))
     new_cache = {"layers": new_layer_caches, "cur": cur + 1}
     if k_pos_new is not None:
-        new_cache["k_pos"] = k_pos_new
+        new_cache["k_pos"] = k_pos_new if (per_slot or k_pos_vec.ndim == 2) \
+            else k_pos_new[0]
     return x, new_cache
 
 
@@ -237,8 +294,11 @@ def cache_capacity(cfg: ModelConfig, seq_len: int) -> int:
     return seq_len
 
 
-def cache_spec(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
-    """ShapeDtypeStruct tree describing the cache at a given fill level."""
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int, dtype=None,
+               per_slot: bool = False):
+    """ShapeDtypeStruct tree describing the cache at a given fill level.
+    `per_slot=True` gives the continuous-batching layout: every row has
+    its own position (`cur` [B], `k_pos` [B, W])."""
     cdt = dtype or jnp.dtype(cfg.compute_dtype)
     L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim_
     W = cache_capacity(cfg, seq_len)
@@ -250,13 +310,14 @@ def cache_spec(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
     if cfg.use_mamba or cfg.parallel_mamba:
         layers["conv"] = sds((L, batch, cfg.conv_kernel - 1, cfg.d_inner_), cdt)
         layers["ssm"] = sds((L, batch, cfg.d_inner_, cfg.ssm_state), jnp.float32)
-    spec = {"layers": layers, "cur": sds((), jnp.int32)}
+    spec = {"layers": layers,
+            "cur": sds((batch,) if per_slot else (), jnp.int32)}
     if cfg.has_attention or cfg.parallel_mamba:
-        spec["k_pos"] = sds((W,), jnp.int32)
+        spec["k_pos"] = sds((batch, W) if per_slot else (W,), jnp.int32)
     return spec
 
 
-def cache_axes(cfg: ModelConfig):
+def cache_axes(cfg: ModelConfig, per_slot: bool = False):
     """Logical axes tree matching cache_spec (for shardings)."""
     layers: dict[str, Any] = {}
     if cfg.has_attention or cfg.parallel_mamba:
@@ -265,22 +326,24 @@ def cache_axes(cfg: ModelConfig):
     if cfg.use_mamba or cfg.parallel_mamba:
         layers["conv"] = ("layer", "batch", None, "act_dinner")
         layers["ssm"] = ("layer", "batch", "act_dinner", None)
-    axes = {"layers": layers, "cur": ()}
+    axes = {"layers": layers, "cur": ("batch",) if per_slot else ()}
     if cfg.has_attention or cfg.parallel_mamba:
-        axes["k_pos"] = (None,)
+        axes["k_pos"] = ("batch", None) if per_slot else (None,)
     return axes
 
 
-def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
-    """Zero-filled cache (serving from scratch)."""
-    spec = cache_spec(cfg, batch, seq_len)
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               per_slot: bool = False):
+    """Zero-filled cache (serving from scratch). Per-slot caches start
+    fully invalid: cur = 0, every k_pos = -1 (masked)."""
+    spec = cache_spec(cfg, batch, seq_len, per_slot=per_slot)
 
     def zero(s):
         z = jnp.zeros(s.shape, s.dtype)
         return z
 
     cache = jax.tree.map(zero, spec)
-    cache["cur"] = jnp.int32(0)
+    cache["cur"] = jnp.zeros((batch,), jnp.int32) if per_slot else jnp.int32(0)
     if "k_pos" in cache:
         cache["k_pos"] = jnp.full(spec["k_pos"].shape, -1, jnp.int32)
     return cache
@@ -315,14 +378,24 @@ def forward_fn(params, batch, cfg: ModelConfig, engine: ActivationEngine):
 
 
 def prefill_fn(params, batch, cfg: ModelConfig, engine: ActivationEngine,
-               capacity: int | None = None):
+               capacity: int | None = None, lengths=None):
+    """With `lengths` (int32 [B], or a batch["lengths"] entry) the prompt
+    block is treated as ragged/right-padded: the returned logits are read
+    at each row's last *real* token and the cache is per-slot."""
     tokens = batch["tokens"]
     S = tokens.shape[1]
     capacity = capacity or cache_capacity(cfg, S)
+    if lengths is None:
+        lengths = batch.get("lengths")
     x = embed_tokens(params, tokens, cfg, batch.get("patch_embeds"))
-    x, cache = run_stack_prefill(params, x, batch, cfg, engine, capacity)
+    x, cache = run_stack_prefill(params, x, batch, cfg, engine, capacity,
+                                 lengths=lengths)
     x = apply_norm(params["ln_f"], x, cfg)
-    last = x[:, -1:]
+    if lengths is None:
+        last = x[:, -1:]
+    else:
+        idx = (lengths - 1).astype(jnp.int32)[:, None, None]
+        last = jnp.take_along_axis(x, idx, axis=1)         # [B, 1, d]
     logits = lm_logits(params, last, cfg)[:, 0]
     return logits, cache
 

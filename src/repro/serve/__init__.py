@@ -1,0 +1,19 @@
+"""Continuous-batching serve subsystem.
+
+`ServeEngine` (engine.py) owns the per-slot cache and the in-jit decode
+scan; `FifoScheduler` (scheduler.py) owns host-side request/slot
+bookkeeping and the prompt bucketing policy.
+"""
+from .engine import EngineConfig, EngineStats, ServeEngine, sample_tokens
+from .scheduler import Completion, FifoScheduler, Request, bucket_len
+
+__all__ = [
+    "Completion",
+    "EngineConfig",
+    "EngineStats",
+    "FifoScheduler",
+    "Request",
+    "ServeEngine",
+    "bucket_len",
+    "sample_tokens",
+]

@@ -1,0 +1,305 @@
+"""Continuous-batching serve engine: fixed decode slots, per-slot cache
+positions, in-jit multi-token decode.
+
+The engine owns one per-slot KV/SSM cache of shape [B=slots, W] (cache
+contract: models/model.py — `cur` [B], `k_pos` [B, W]) and runs decode as
+a single jitted `lax.scan` over `chunk` steps: embedding, stack, sampling
+and per-slot EOS/budget masking all happen on device, so the host pays
+one dispatch + one sync per chunk instead of per token. Between chunks
+the host harvests finished slots and admits queued requests into the
+freed rows (iteration-level continuous batching; admission granularity =
+`chunk` decode steps).
+
+Admission prefills one request at a time at a bucketed (power-of-two)
+prompt length — the ragged prefill path reads logits at the last real
+token and excludes pads from the cache — then writes the request's row
+into the big cache with a jitted, donated slot-insert. Slot writes
+replace the *entire* row (all W key positions), so stale state from the
+previous occupant can never leak into the new request's attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import steps as steps_mod
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+from .scheduler import (Completion, FifoScheduler, Request, SlotRun,
+                        bucket_len)
+
+
+def sample_tokens(key, logits, temperature):
+    """Per-row sampling: temperature <= 0 -> greedy. logits [B, V],
+    temperature [B] f32. Returns int32 [B]."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, scaled).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)
+
+
+def make_decode_chunk(cfg: ModelConfig, n_steps: int):
+    """Jit-able (params, cache, state) -> (cache, state, toks [T, B]):
+    `n_steps` decode steps fully on device. Rows record their sampled
+    token while active and 0 afterwards; `emitted`/`active` advance so
+    the host can replay termination exactly (EOS or budget)."""
+    engine = steps_mod.make_engine(cfg)
+
+    def chunk(params, cache, state):
+        budget, temp, eos = state["budget"], state["temp"], state["eos"]
+
+        def body(carry, _):
+            cache, tok, key, emitted, active = carry
+            logits, cache = M.decode_fn(params, {"tokens": tok[:, None]},
+                                        cache, cfg, engine)
+            key, sub = jax.random.split(key)
+            nxt = sample_tokens(sub, logits, temp)
+            nxt = jnp.where(active, nxt, 0)                # pad idle rows
+            emitted = emitted + active.astype(jnp.int32)
+            active = active & (nxt != eos) & (emitted < budget)
+            return (cache, nxt, key, emitted, active), nxt
+
+        carry0 = (cache, state["tok"], state["key"],
+                  state["emitted"], state["active"])
+        (cache, tok, key, emitted, active), toks = jax.lax.scan(
+            body, carry0, None, length=n_steps)
+        new_state = dict(state, tok=tok, key=key, emitted=emitted,
+                         active=active)
+        return cache, new_state, toks
+
+    return chunk
+
+
+def make_slot_insert(cfg: ModelConfig):
+    """Jit-able slot admission: write one prefilled request (a B=1
+    per-slot cache) into row `slot` of the big cache + slot-state arrays.
+    `slot` is traced, so one compilation covers every slot index."""
+
+    def insert(cache, state, slot, small_cache, slot_vals):
+        upd = jax.lax.dynamic_update_slice_in_dim
+        layers = jax.tree.map(
+            lambda big, sm: upd(big, sm.astype(big.dtype), slot, axis=1),
+            cache["layers"], small_cache["layers"])
+        new_cache = {"layers": layers,
+                     "cur": upd(cache["cur"], small_cache["cur"], slot, 0)}
+        if "k_pos" in cache:
+            new_cache["k_pos"] = upd(cache["k_pos"], small_cache["k_pos"],
+                                     slot, 0)
+        new_state = dict(state)
+        for name, val in slot_vals.items():
+            new_state[name] = upd(state[name],
+                                  val.astype(state[name].dtype)[None], slot, 0)
+        return new_cache, new_state
+
+    return insert
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    slots: int = 4              # decode batch width (fixed)
+    max_prompt_len: int = 256
+    max_len: int = 512          # prompt + generation bound per request
+    chunk: int = 8              # in-jit decode steps per host dispatch
+    min_bucket: int = 16        # smallest prefill bucket
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_prompt_len >= self.max_len:
+            raise ValueError("max_prompt_len must leave room to generate "
+                             f"({self.max_prompt_len} >= {self.max_len})")
+        if self.slots < 1 or self.chunk < 1:
+            # zero slots/chunk would make run() spin without progress
+            raise ValueError(f"slots ({self.slots}) and chunk "
+                             f"({self.chunk}) must be >= 1")
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_s: float = 0.0
+    prefill_tokens: int = 0        # real prompt tokens prefilled
+    prefill_padded_tokens: int = 0  # incl. bucket padding
+    decode_s: float = 0.0
+    decode_chunks: int = 0
+    decode_steps: int = 0          # chunks * chunk (batch-wide steps)
+    decode_tokens: int = 0         # real tokens emitted during decode
+
+    @property
+    def prefill_tokens_per_s(self):
+        return self.prefill_tokens / self.prefill_s if self.prefill_s else 0.0
+
+    @property
+    def decode_tokens_per_s(self):
+        return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+
+class ServeEngine:
+    """Continuous-batching server over one model + parameter set.
+
+    >>> eng = ServeEngine(cfg, params, EngineConfig(slots=4))
+    >>> eng.submit([1, 2, 3], max_new=16)
+    >>> done = eng.run()          # list[Completion], uid order
+    """
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig = None):
+        if cfg.n_codebooks > 1:
+            raise NotImplementedError(
+                "multi-codebook decode is not slot-batched; use the "
+                "python-loop serve path (launch/serve.py)")
+        self.cfg = cfg
+        self.ecfg = ecfg or EngineConfig()
+        self.params = params
+        self.capacity = M.cache_capacity(cfg, self.ecfg.max_len)
+        # SSM/conv state is contaminated by trailing pad tokens, so
+        # stateful archs prefill at exact prompt lengths (scheduler.py)
+        self._exact_buckets = cfg.use_mamba or cfg.parallel_mamba
+
+        B = self.ecfg.slots
+        self.cache = M.init_cache(cfg, B, self.ecfg.max_len, per_slot=True)
+        self.state = {
+            "tok": jnp.zeros((B,), jnp.int32),
+            "key": jax.random.key(self.ecfg.seed),
+            "emitted": jnp.zeros((B,), jnp.int32),
+            "active": jnp.zeros((B,), bool),
+            "budget": jnp.zeros((B,), jnp.int32),
+            "temp": jnp.zeros((B,), jnp.float32),
+            "eos": jnp.full((B,), -1, jnp.int32),
+        }
+        self._key = jax.random.key(self.ecfg.seed + 1)
+
+        self._prefill = jax.jit(
+            steps_mod.make_prefill_step(cfg, capacity=self.capacity))
+        self._insert = jax.jit(make_slot_insert(cfg), donate_argnums=(0, 1))
+        self._decode = jax.jit(make_decode_chunk(cfg, self.ecfg.chunk),
+                               donate_argnums=(1, 2))
+
+        self.sched = FifoScheduler(B)
+        self.stats = EngineStats()
+        self.completions: list[Completion] = []
+        self._uid = 0
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, prompt_tokens, max_new: int, *, temperature: float = 0.0,
+               eos_id: Optional[int] = None) -> int:
+        toks = [int(t) for t in np.asarray(prompt_tokens).reshape(-1)]
+        if not toks:
+            raise ValueError("empty prompt")
+        if len(toks) > self.ecfg.max_prompt_len:
+            raise ValueError(f"prompt length {len(toks)} > max_prompt_len "
+                             f"{self.ecfg.max_prompt_len}")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        uid = self._uid
+        self._uid += 1
+        self.sched.submit(Request(
+            uid=uid, tokens=toks, max_new=max_new, temperature=temperature,
+            eos_id=-1 if eos_id is None else int(eos_id),
+            submitted_at=time.perf_counter()))
+        return uid
+
+    # -- admission ---------------------------------------------------------
+
+    def _admit(self, slot: int, req: Request) -> None:
+        L = len(req.tokens)
+        bucket = bucket_len(L, min_bucket=self.ecfg.min_bucket,
+                            max_len=self.ecfg.max_prompt_len,
+                            exact=self._exact_buckets)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :L] = req.tokens
+        batch = {"tokens": jnp.asarray(padded),
+                 "lengths": jnp.asarray([L], jnp.int32)}
+
+        t0 = time.perf_counter()
+        logits, small_cache = self._prefill(self.params, batch)
+        logits = jax.block_until_ready(logits)
+        now = time.perf_counter()
+        self.stats.prefill_s += now - t0
+        self.stats.prefill_tokens += L
+        self.stats.prefill_padded_tokens += bucket
+
+        self._key, sub = jax.random.split(self._key)
+        temp = jnp.full((1,), req.temperature, jnp.float32)
+        tok0 = int(sample_tokens(sub, logits, temp)[0])
+        budget = min(req.max_new, self.ecfg.max_len - L)
+
+        if tok0 == req.eos_id or budget <= 1:
+            # single-token request: finished at admission, slot stays free
+            reason = "eos" if tok0 == req.eos_id else "length"
+            self._complete(req, [tok0], reason, admitted_at=now)
+            return
+
+        slot_vals = {
+            "tok": jnp.asarray(tok0, jnp.int32),
+            "emitted": jnp.asarray(1, jnp.int32),
+            "active": jnp.asarray(True),
+            "budget": jnp.asarray(budget, jnp.int32),
+            "temp": jnp.asarray(req.temperature, jnp.float32),
+            "eos": jnp.asarray(req.eos_id, jnp.int32),
+        }
+        self.cache, self.state = self._insert(
+            self.cache, self.state, jnp.int32(slot), small_cache, slot_vals)
+        self.sched.bind(slot, SlotRun(request=req, tokens=[tok0],
+                                      admitted_at=now))
+
+    def _admit_ready(self) -> None:
+        while True:
+            free = self.sched.free_slots()
+            if not free or not self.sched.queue:
+                return
+            # a request that finishes at admission leaves its slot free,
+            # so the loop re-checks rather than iterating a fixed list
+            self._admit(free[0], self.sched.next_request())
+
+    def _complete(self, req: Request, tokens, reason: str, *,
+                  admitted_at: float) -> None:
+        self.completions.append(Completion(
+            uid=req.uid, prompt_len=len(req.tokens), tokens=list(tokens),
+            finish_reason=reason, submitted_at=req.submitted_at,
+            admitted_at=admitted_at, finished_at=time.perf_counter()))
+
+    # -- decode loop -------------------------------------------------------
+
+    def step(self) -> bool:
+        """Admit + one decode chunk. Returns False when nothing decoded."""
+        self._admit_ready()
+        active = self.sched.active_slots()
+        if not active:
+            return False
+
+        t0 = time.perf_counter()
+        self.cache, self.state, toks = self._decode(
+            self.params, self.cache, self.state)
+        toks = np.asarray(toks)                            # [T, B]; syncs
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.decode_chunks += 1
+        self.stats.decode_steps += toks.shape[0]
+
+        for b in active:
+            run = self.sched.slots[b]
+            req = run.request
+            budget = min(req.max_new, self.ecfg.max_len - len(req.tokens))
+            for t in range(toks.shape[0]):
+                tok = int(toks[t, b])
+                run.tokens.append(tok)
+                self.stats.decode_tokens += 1
+                if tok == req.eos_id or len(run.tokens) >= budget:
+                    self.sched.evict(b)
+                    self._complete(
+                        req, run.tokens,
+                        "eos" if tok == req.eos_id else "length",
+                        admitted_at=run.admitted_at)
+                    break
+        return True
+
+    def run(self) -> list[Completion]:
+        """Serve until queue and slots drain. Completions in uid order."""
+        while self.sched.pending:
+            if not self.step() and not self.sched.queue:
+                break
+        return sorted(self.completions, key=lambda c: c.uid)

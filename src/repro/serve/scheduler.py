@@ -1,0 +1,109 @@
+"""Host-side scheduling for the continuous-batching serve engine.
+
+Pure-Python bookkeeping, deliberately free of jax: requests, completions,
+the FIFO admission queue, and the prompt-length bucketing policy. The
+device-side counterpart (cache slots, in-jit decode) lives in engine.py.
+
+Bucketing: variable-length admission would recompile the prefill step for
+every distinct prompt length. Prompts are right-padded to power-of-two
+buckets (floored at `min_bucket`), so the number of distinct prefill
+traces is log2(max_prompt_len) — pad tokens are causally downstream of
+every real token and are excluded from the KV cache by the ragged
+prefill (models/model.py), so bucketing is semantics-free for attention
+caches. SSM/conv states *are* contaminated by trailing pads, so stateful
+archs (mamba / hybrid) use exact-length buckets instead.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+
+def next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def bucket_len(length: int, *, min_bucket: int = 16, max_len: int,
+               exact: bool = False) -> int:
+    """Padded prompt length for a real prompt of `length` tokens."""
+    if length > max_len:
+        raise ValueError(f"prompt length {length} exceeds max_prompt_len "
+                         f"{max_len}")
+    if exact:
+        return length
+    # top bucket is clamped to max_len itself (not its pow2 ceiling):
+    # nothing requires it to be a power of two, and padding past
+    # max_prompt_len would only waste prefill compute
+    return min(max(next_pow2(length), min_bucket), max_len)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: list            # prompt token ids
+    max_new: int
+    temperature: float = 0.0
+    eos_id: int = -1        # -1: never stops on a token
+    submitted_at: float = 0.0
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    prompt_len: int
+    tokens: list            # generated ids (includes the eos if hit)
+    finish_reason: str      # "eos" | "length"
+    submitted_at: float = 0.0
+    admitted_at: float = 0.0
+    finished_at: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_at - self.submitted_at
+
+    @property
+    def queue_s(self) -> float:
+        return self.admitted_at - self.submitted_at
+
+
+@dataclasses.dataclass
+class SlotRun:
+    """One in-flight request bound to a decode-batch slot."""
+    request: Request
+    tokens: list            # generated so far (host copy)
+    admitted_at: float
+
+
+class FifoScheduler:
+    """FIFO admission over a fixed set of decode slots."""
+
+    def __init__(self, n_slots: int):
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[Optional[SlotRun]] = [None] * n_slots
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def active_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def next_request(self) -> Optional[Request]:
+        return self.queue.popleft() if self.queue else None
+
+    def bind(self, slot: int, run: SlotRun) -> None:
+        assert self.slots[slot] is None, f"slot {slot} busy"
+        self.slots[slot] = run
+
+    def evict(self, slot: int) -> SlotRun:
+        run = self.slots[slot]
+        assert run is not None, f"slot {slot} already free"
+        self.slots[slot] = None
+        return run
+
+    @property
+    def pending(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
