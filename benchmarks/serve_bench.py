@@ -3,7 +3,7 @@
     PYTHONPATH=src python -m benchmarks.serve_bench            # table
     PYTHONPATH=src python -m benchmarks.serve_bench --json out.json
 
-Two measurements on the smoke qwen3 config (CPU; relative numbers):
+Three measurements on the smoke qwen3 config (CPU; relative numbers):
 
   * decode-path comparison — the same lockstep workload (B prompts of
     one length, greedy, `gen` tokens each) served by the legacy
@@ -14,6 +14,15 @@ Two measurements on the smoke qwen3 config (CPU; relative numbers):
   * offered-load sweep — queue depths of 1x/2x/4x the slot count with
     variable-length prompts; reports prefill/decode throughput and
     p50/p99 end-to-end request latency (queue wait included) per load.
+  * admission sweep — the same 2x/4x workloads served with batched
+    (bucket-grouped, one ragged prefill dispatch per admission round)
+    vs serial (one request per dispatch — the PR-2 admission
+    granularity) admission; reports p50/p99 *queue* latency (submit ->
+    admitted) and wall time per mode. Both modes use the engine's
+    on-device first-token sampling, so the measured gap is attributable
+    to admission batching alone (conservative vs the true PR-2
+    baseline, which also synced full-vocab logits per request). The
+    PASS criterion is batched p50 queue latency <= serial at each load.
 """
 from __future__ import annotations
 
@@ -69,15 +78,51 @@ def _python_loop_decode(cfg, params, prompts_arr, gen):
 
 
 def _engine_pass(engine, prompts, gen):
-    """Submit + drain one workload; returns (stats, completions) with
-    the engine's counters reset around the measurement."""
+    """Submit + drain one workload; returns (stats, completions, wall_s)
+    with the engine's counters reset around the measurement."""
     from repro.serve.engine import EngineStats
     engine.stats = EngineStats()
     for p in prompts:
         engine.submit(p, max_new=gen)
+    t0 = time.perf_counter()
     done = engine.run()
+    wall = time.perf_counter() - t0
     engine.completions = []
-    return engine.stats, done
+    return engine.stats, done, wall
+
+
+def _admission_sweep(cfg, params, seed):
+    """Batched vs serial admission on identical 2x/4x offered loads.
+
+    Each mode gets its own engine (its own jit caches) and is warmed on
+    the exact measurement workload first — admission order is
+    deterministic given the workload, so the warm pass compiles every
+    (bucket, batch-size) prefill/insert shape the timed pass will hit."""
+    rows = []
+    for mult in (2, 4):
+        n = SLOTS * mult
+        prompts = _workload(np.random.RandomState(seed + mult), n)
+        row = {"offered_requests": n}
+        for mode in ("batched", "serial"):
+            eng = ServeEngine(cfg, params, EngineConfig(
+                slots=SLOTS, max_prompt_len=MAX_PROMPT,
+                max_len=MAX_PROMPT + GEN, chunk=8, seed=seed,
+                admission=mode))
+            _engine_pass(eng, prompts, GEN)              # warm
+            st, done, wall = _engine_pass(eng, prompts, GEN)
+            q = np.asarray(sorted(c.queue_s for c in done))
+            row[mode] = {
+                "wall_s": wall,
+                "prefill_batches": st.prefill_batches,
+                "prefill_requests": st.prefill_requests,
+                "prefill_s": st.prefill_s,
+                "p50_queue_s": float(np.percentile(q, 50)),
+                "p99_queue_s": float(np.percentile(q, 99)),
+            }
+        row["p50_queue_speedup"] = (row["serial"]["p50_queue_s"]
+                                    / max(row["batched"]["p50_queue_s"], 1e-9))
+        rows.append(row)
+    return rows
 
 
 def run(verbose: bool = True, json_path: str | None = None,
@@ -108,7 +153,7 @@ def run(verbose: bool = True, json_path: str | None = None,
         "decode_s": dec_s,
         "decode_steps": GEN - 1,
     }
-    st, _ = _engine_pass(engine, fixed, GEN)
+    st, _, _ = _engine_pass(engine, fixed, GEN)
     engine_lockstep = {
         "prefill_tokens_per_s": st.prefill_tokens_per_s,
         "decode_tokens_per_s": st.decode_tokens_per_s,
@@ -122,7 +167,7 @@ def run(verbose: bool = True, json_path: str | None = None,
     loads = []
     for mult in (1, 2, 4):
         n = SLOTS * mult
-        st, done = _engine_pass(engine, _workload(rng, n), GEN)
+        st, done, _ = _engine_pass(engine, _workload(rng, n), GEN)
         lat = np.asarray(sorted(c.latency_s for c in done))
         loads.append({
             "offered_requests": n,
@@ -133,6 +178,12 @@ def run(verbose: bool = True, json_path: str | None = None,
             "p99_latency_s": float(np.percentile(lat, 99)),
         })
 
+    # -- batched vs serial admission -------------------------------------
+    admission = _admission_sweep(cfg, params, seed)
+    admission_ok = all(
+        row["batched"]["p50_queue_s"] <= row["serial"]["p50_queue_s"]
+        for row in admission)
+
     result = {
         "arch": cfg.name,
         "slots": SLOTS,
@@ -142,7 +193,8 @@ def run(verbose: bool = True, json_path: str | None = None,
         "engine_lockstep": engine_lockstep,
         "decode_speedup_scan_vs_python": speedup,
         "offered_load_sweep": loads,
-        "status": "PASS" if speedup > 1.0 else "FAIL",
+        "admission_sweep": admission,
+        "status": "PASS" if (speedup > 1.0 and admission_ok) else "FAIL",
     }
     if verbose:
         print(f"== serve_bench ({cfg.name}, {SLOTS} slots, gen {GEN}) ==")
@@ -155,6 +207,15 @@ def run(verbose: bool = True, json_path: str | None = None,
                   f"decode {ld['decode_tokens_per_s']:7.1f} tok/s  "
                   f"p50 {ld['p50_latency_s']*1e3:7.0f} ms  "
                   f"p99 {ld['p99_latency_s']*1e3:7.0f} ms")
+        for row in admission:
+            b, s = row["batched"], row["serial"]
+            print(f"admission {row['offered_requests']:3d} reqs: "
+                  f"queue p50 {b['p50_queue_s']*1e3:6.0f} ms batched "
+                  f"({b['prefill_batches']} dispatches) vs "
+                  f"{s['p50_queue_s']*1e3:6.0f} ms serial "
+                  f"({s['prefill_batches']}); p99 "
+                  f"{b['p99_queue_s']*1e3:6.0f} vs "
+                  f"{s['p99_queue_s']*1e3:6.0f} ms")
         print(f"status: {result['status']}")
     if json_path:
         with open(json_path, "w") as f:

@@ -6,7 +6,9 @@
 `serve_batch` is a thin compatibility wrapper over `repro.serve`'s
 ServeEngine: prompts become engine requests, decode runs as in-jit
 `lax.scan` chunks with on-device sampling, and the returned tokens/stats
-match the old lockstep contract. The legacy per-token python loop is
+match the old lockstep contract. With `--model-parallel N` the engine's
+whole datapath (batched prefill, slot insert, decode chunks) runs under
+explicit NamedShardings on the mesh. The legacy per-token python loop is
 kept as `backend="python"` — it is the benchmark baseline the scan path
 is measured against, and the only path for multi-codebook (musicgen)
 decode, which is not slot-batched.
@@ -28,13 +30,7 @@ from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.parallel import partition as part
-from repro.serve import EngineConfig, ServeEngine
-
-
-def sample_logits(key, logits, temperature: float):
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+from repro.serve import EngineConfig, ServeEngine, sample_tokens
 
 
 @dataclasses.dataclass
@@ -49,6 +45,10 @@ class ServeStats:
 
     @property
     def prefill_tokens_per_s(self):
+        # a sub-resolution prefill (or a path that skipped it) leaves
+        # prefill_s exactly 0.0 — mirror the decode guard, don't divide
+        if not self.prefill_s:
+            return 0.0
         return self.n_prompts * self.prompt_len / self.prefill_s
 
     @property
@@ -58,16 +58,36 @@ class ServeStats:
         return self.decode_tokens / self.decode_s if self.decode_s else 0.0
 
 
+def _mask_after_eos(tokens: np.ndarray, eos_id: int) -> np.ndarray:
+    """Right-pad each row with 0 after its first `eos_id` (the eos itself
+    is kept) — the engine's ragged-completion contract."""
+    out = tokens.copy()
+    for b in range(out.shape[0]):
+        hits = np.nonzero(out[b] == eos_id)[0]
+        if hits.size:
+            out[b, hits[0] + 1:] = 0
+    return out
+
+
 def _serve_batch_python(cfg, params, prompts, gen_tokens: int, *,
                         temperature: float = 0.0, seed: int = 0,
-                        capacity: int | None = None):
+                        capacity: int | None = None,
+                        eos_id: int | None = None):
     """Lockstep per-token python loop: one jitted decode dispatch + host
     sync per token. Exactly gen_tokens - 1 decode steps run (the first
-    token is sampled from the prefill logits; no trailing wasted step)."""
+    token is sampled from the prefill logits; no trailing wasted step).
+    With `eos_id`, rows are right-padded with 0 after their first eos —
+    token-identical (greedy) to the engine's early-stop, though the
+    lockstep loop still runs the full gen_tokens steps."""
     B, S = prompts.shape[0], prompts.shape[1]
+    if eos_id is not None and cfg.n_codebooks > 1:
+        raise NotImplementedError(
+            "eos early-stop is per-row over a single token stream; "
+            "multi-codebook decode has no such stream")
     capacity = capacity or M.cache_capacity(cfg, S + gen_tokens)
     prefill = jax.jit(steps_mod.make_prefill_step(cfg, capacity=capacity))
     decode = jax.jit(steps_mod.make_serve_step(cfg), donate_argnums=(2,))
+    temp = jnp.full((B,), temperature, jnp.float32)
 
     t0 = time.perf_counter()
     logits, cache = prefill(params, {"tokens": prompts})
@@ -80,19 +100,21 @@ def _serve_batch_python(cfg, params, prompts, gen_tokens: int, *,
     key = jax.random.key(seed)
     key, sub = jax.random.split(key)
     multi = cfg.n_codebooks > 1
-    tok = sample_logits(sub, logits, temperature)          # [B(, K)]
+    tok = sample_tokens(sub, logits, temp)                 # [B(, K)]
     out = [tok]
     t0 = time.perf_counter()
     for _ in range(gen_tokens - 1):
         step_tok = tok[:, None] if not multi else tok[:, None, :]
         key, sub = jax.random.split(key)
         logits, cache = decode(params, {"tokens": step_tok}, cache)
-        tok = sample_logits(sub, logits, temperature)
+        tok = sample_tokens(sub, logits, temp)
         out.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.perf_counter() - t0
 
     tokens = jnp.stack(out, axis=1)                        # [B, gen(, K)]
+    if eos_id is not None:
+        tokens = jnp.asarray(_mask_after_eos(np.asarray(tokens), eos_id))
     return tokens, ServeStats(t_prefill, t_decode, B, S, gen_tokens,
                               decode_steps=gen_tokens - 1,
                               decode_tokens=B * (gen_tokens - 1))
@@ -101,29 +123,47 @@ def _serve_batch_python(cfg, params, prompts, gen_tokens: int, *,
 def serve_batch(cfg, params, prompts, gen_tokens: int, *,
                 temperature: float = 0.0, seed: int = 0,
                 capacity: int | None = None, backend: str = "engine",
-                slots: int | None = None, chunk: int = 8):
+                slots: int | None = None, chunk: int = 8,
+                eos_id: int | None = None, mesh=None,
+                rules: dict | None = None):
     """prompts: int32 [B, S(, K)]. Returns (tokens [B, gen(, K)], stats).
 
-    backend "engine": continuous-batching ServeEngine (in-jit scan
-    decode); "python": legacy per-token loop. Multi-codebook archs and
-    an explicit `capacity` (the engine sizes its own per-slot cache from
-    S + gen_tokens) force the python path, which honors it exactly."""
+    backend "engine": continuous-batching ServeEngine (batched-bucket
+    admission, in-jit scan decode; `mesh` shards its datapath). "python":
+    legacy per-token loop. Multi-codebook archs and an explicit
+    `capacity` (the engine sizes its own per-slot cache from
+    S + gen_tokens) force the python path, which honors it exactly.
+
+    With `eos_id`, rows that emit it stop early; every returned row is
+    right-padded with 0 to gen_tokens, so completions of ragged lengths
+    still stack into one [B, gen] block."""
     B, S = prompts.shape[0], prompts.shape[1]
     if cfg.n_codebooks > 1 or backend == "python" or capacity is not None:
+        if mesh is not None and mesh.size > 1:
+            # refusing beats the pre-PR-3 failure mode: a mesh that is
+            # accepted and then silently ignored looks exactly like TP
+            # working until someone checks device memory
+            raise NotImplementedError(
+                "sharded serving is engine-only; the python fallback "
+                "(multi-codebook / explicit capacity / backend='python') "
+                "would serve unsharded despite the mesh")
         return _serve_batch_python(cfg, params, prompts, gen_tokens,
                                    temperature=temperature, seed=seed,
-                                   capacity=capacity)
+                                   capacity=capacity, eos_id=eos_id)
 
     ecfg = EngineConfig(slots=slots or B, max_prompt_len=S,
                         max_len=S + gen_tokens,
                         chunk=max(1, min(chunk, gen_tokens - 1) or 1),
                         seed=seed)
-    engine = ServeEngine(cfg, params, ecfg)
+    engine = ServeEngine(cfg, params, ecfg, mesh=mesh, rules=rules)
     for b in range(B):
         engine.submit(np.asarray(prompts[b]), gen_tokens,
-                      temperature=temperature)
+                      temperature=temperature, eos_id=eos_id)
     done = engine.run()
-    tokens = jnp.asarray([c.tokens for c in done], jnp.int32)  # [B, gen]
+    rows = np.zeros((B, gen_tokens), np.int32)             # 0-padded ragged
+    for c in done:
+        rows[c.uid, :len(c.tokens)] = c.tokens
+    tokens = jnp.asarray(rows)                             # [B, gen]
     st = engine.stats
     return tokens, ServeStats(st.prefill_s, st.decode_s, B, S, gen_tokens,
                               decode_steps=st.decode_steps,
@@ -147,6 +187,8 @@ def main(argv=None):
                    help="decode slots (engine backend; default = batch)")
     p.add_argument("--chunk", type=int, default=8,
                    help="in-jit decode steps per dispatch (engine backend)")
+    p.add_argument("--eos-id", type=int, default=None,
+                   help="stop rows early on this token id")
     p.add_argument("--json", default=None, help="write stats JSON here")
     args = p.parse_args(argv)
 
@@ -156,6 +198,11 @@ def main(argv=None):
             cfg, activation=dataclasses.replace(cfg.activation,
                                                 impl=args.activation))
     mesh = make_host_mesh(1, args.model_parallel)
+    if args.model_parallel > 1 and dict(mesh.shape).get("model", 1) < 2:
+        raise SystemExit(
+            f"--model-parallel {args.model_parallel} needs that many "
+            f"devices; found {len(jax.devices())} (force host devices via "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     print(f"[serve] arch={cfg.name} act={cfg.activation.tag()} "
           f"backend={args.backend} mesh={dict(mesh.shape)}")
 
@@ -174,7 +221,8 @@ def main(argv=None):
         tokens, stats = serve_batch(cfg, params, prompts, args.gen,
                                     temperature=args.temperature,
                                     seed=args.seed, backend=args.backend,
-                                    slots=args.slots, chunk=args.chunk)
+                                    slots=args.slots, chunk=args.chunk,
+                                    eos_id=args.eos_id, mesh=mesh)
 
     print(f"[serve] prefill {stats.prefill_tokens_per_s:,.0f} tok/s "
           f"({stats.prefill_s*1e3:.0f} ms), decode "

@@ -159,7 +159,9 @@ def make_serve_step(cfg: ModelConfig):
 # sharding resolution + jit wiring for a (cfg, shape, mesh) cell
 # ---------------------------------------------------------------------------
 
-def _axes_shardings(axes_tree, shapes_tree, mesh, rules):
+def axes_shardings(axes_tree, shapes_tree, mesh, rules):
+    """NamedSharding tree from a logical-axes tree + matching shapes tree
+    (strict resolution: these feed jit in/out_shardings)."""
     def one(axes, sds):
         return part.make_sharding(tuple(axes), tuple(sds.shape), strict=True,
                                   mesh=mesh, rules=rules)
@@ -167,6 +169,25 @@ def _axes_shardings(axes_tree, shapes_tree, mesh, rules):
         one, axes_tree, shapes_tree,
         is_leaf=lambda t: isinstance(t, tuple) and all(
             isinstance(e, (str, type(None))) for e in t))
+
+
+def serve_shardings(cfg: ModelConfig, slots: int, seq_len: int, mesh,
+                    rules: dict | None = None):
+    """(params, cache, replicated) NamedShardings for the serve engine's
+    jitted datapath: params by their logical axes, the per-slot cache by
+    `models/model.py::cache_axes(per_slot=True)` — the same machinery the
+    dry-run and train paths resolve shardings with. Everything else in
+    the engine (token blocks, slot-state vectors, PRNG keys) is
+    replicated: those are host-scheduled per-row values, tiny next to the
+    weights/cache, and replication keeps slot scatter/gather local."""
+    rules = rules or part.serve_rules()
+    pshapes, paxes = M.abstract_params(cfg)
+    psharding = axes_shardings(paxes, pshapes, mesh, rules)
+    cspec = M.cache_spec(cfg, slots, seq_len, per_slot=True)
+    csharding = axes_shardings(M.cache_axes(cfg, per_slot=True), cspec,
+                               mesh, rules)
+    replicated = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return psharding, csharding, replicated
 
 
 def build_cell(cfg: ModelConfig, shape: shp.ShapeCell, mesh, *,
@@ -179,10 +200,10 @@ def build_cell(cfg: ModelConfig, shape: shp.ShapeCell, mesh, *,
     """
     rules = rules or part.DEFAULT_RULES
     pshapes, paxes = M.abstract_params(cfg)
-    psharding = _axes_shardings(paxes, pshapes, mesh, rules)
+    psharding = axes_shardings(paxes, pshapes, mesh, rules)
     specs = shp.input_specs(cfg, shape)
     baxes = shp.batch_axes(cfg, shape)
-    bsharding = _axes_shardings(baxes, specs["batch"], mesh, rules)
+    bsharding = axes_shardings(baxes, specs["batch"], mesh, rules)
 
     if shape.kind == "train":
         osh = opt_state_axes(paxes)
@@ -193,7 +214,7 @@ def build_cell(cfg: ModelConfig, shape: shp.ShapeCell, mesh, *,
         if hyper.grad_compression:
             osh["error"] = paxes
             ostate_shapes["error"] = pshapes
-        osharding = _axes_shardings(osh, ostate_shapes, mesh, rules)
+        osharding = axes_shardings(osh, ostate_shapes, mesh, rules)
         step_sh = None  # replicated scalar
         fn = jax.jit(
             make_train_step(cfg, hyper),
@@ -223,7 +244,7 @@ def build_cell(cfg: ModelConfig, shape: shp.ShapeCell, mesh, *,
 
     # decode
     caxes = M.cache_axes(cfg)
-    csharding = _axes_shardings(caxes, specs["cache"], mesh, rules)
+    csharding = axes_shardings(caxes, specs["cache"], mesh, rules)
     fn = jax.jit(
         make_serve_step(cfg),
         in_shardings=(psharding, bsharding, csharding),

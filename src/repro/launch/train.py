@@ -82,8 +82,8 @@ def main(argv=None):
         params, paxes = M.materialize_params(cfg, seed=args.seed)
         pshapes = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
-        pshard = steps_mod._axes_shardings(paxes, pshapes, mesh,
-                                           part.DEFAULT_RULES)
+        pshard = steps_mod.axes_shardings(paxes, pshapes, mesh,
+                                          part.DEFAULT_RULES)
         params = jax.tree.map(jax.device_put, params, pshard)
         opt_state = adamw.init_state(params)
         if hyper.grad_compression:

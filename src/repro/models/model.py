@@ -169,17 +169,16 @@ def run_stack_prefill(params, x, batch, cfg: ModelConfig, engine, capacity: int,
 
     x, caches = jax.lax.scan(scan_body, x, params["blocks"])
     if lengths is None:
-        cache = {
-            "layers": caches,
-            "cur": jnp.int32(S),
-            "k_pos": _prefill_slot_positions(capacity, S),
-        }
+        cache = {"layers": caches, "cur": jnp.int32(S)}
+        if cfg.has_attention or cfg.parallel_mamba:
+            cache["k_pos"] = _prefill_slot_positions(capacity, S)
     else:
-        cache = {
-            "layers": caches,
-            "cur": lengths.astype(jnp.int32),
-            "k_pos": _prefill_slot_positions_ragged(capacity, lengths),
-        }
+        cache = {"layers": caches, "cur": lengths.astype(jnp.int32)}
+        if cfg.has_attention or cfg.parallel_mamba:
+            cache["k_pos"] = _prefill_slot_positions_ragged(capacity, lengths)
+    # k_pos exists exactly when there is a KV ring to mask (matching
+    # cache_spec) — a pure-SSM cache carrying a vestigial k_pos would
+    # break pytree-aligned shardings in the mesh-aware serve engine
     return x, cache
 
 

@@ -76,6 +76,21 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
 }
 
 
+def serve_rules(rules: dict[str, tuple] | None = None) -> dict[str, tuple]:
+    """Rule table for the slot-batched serve engine.
+
+    Identical to the given (or default) table except the batch axis stays
+    replicated: decode slots are host-addressed rows — admission scatters
+    individual rows into the big cache and the scheduler reads/writes
+    per-slot state by index — so sharding the slot dim over `data` would
+    turn every admission and every chunk harvest into a cross-device
+    reshuffle. The engine is tensor-parallel only; scale-out over `data`
+    is replica-level (one engine per replica), not slot-level."""
+    merged = dict(DEFAULT_RULES if rules is None else rules)
+    merged["batch"] = ()
+    return merged
+
+
 @dataclasses.dataclass
 class MeshContext:
     mesh: Mesh | None

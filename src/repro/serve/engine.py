@@ -1,5 +1,5 @@
 """Continuous-batching serve engine: fixed decode slots, per-slot cache
-positions, in-jit multi-token decode.
+positions, in-jit multi-token decode, batched-bucket admission.
 
 The engine owns one per-slot KV/SSM cache of shape [B=slots, W] (cache
 contract: models/model.py — `cur` [B], `k_pos` [B, W]) and runs decode as
@@ -10,12 +10,25 @@ the host harvests finished slots and admits queued requests into the
 freed rows (iteration-level continuous batching; admission granularity =
 `chunk` decode steps).
 
-Admission prefills one request at a time at a bucketed (power-of-two)
-prompt length — the ragged prefill path reads logits at the last real
-token and excludes pads from the cache — then writes the request's row
-into the big cache with a jitted, donated slot-insert. Slot writes
-replace the *entire* row (all W key positions), so stale state from the
-previous occupant can never leak into the new request's attention.
+Admission is *batched by bucket*: the scheduler pops up to
+`len(free_slots)` queued requests that share a prefill bucket
+(power-of-two padded length; exact lengths for stateful archs) and the
+engine prefills them in ONE ragged dispatch. The first token of every
+admitted row is sampled on device inside that same dispatch — the host
+syncs only the [N] int32 token vector (for the EOS / budget<=1
+early-complete check), never the full-vocab logits. Admitted rows are
+then scattered into the big cache with a single jitted, donated
+multi-row slot insert. Slot writes replace the *entire* row (all W key
+positions), so stale state from the previous occupant can never leak
+into the new request's attention.
+
+With a mesh, every jitted step (prefill, insert, decode) carries
+explicit NamedShardings: parameters and the per-slot cache are resolved
+from their logical axes via `launch/steps.py::serve_shardings` (the same
+rule-table machinery the dry-run and train paths use), so
+`--model-parallel N` shards the serving datapath instead of silently
+replicating it. Slot-state vectors and token blocks stay replicated —
+the slot dim is host-addressed (see `parallel/partition.py::serve_rules`).
 """
 from __future__ import annotations
 
@@ -30,18 +43,60 @@ import numpy as np
 from repro.launch import steps as steps_mod
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.parallel import partition as part
 
 from .scheduler import (Completion, FifoScheduler, Request, SlotRun,
                         bucket_len)
 
 
 def sample_tokens(key, logits, temperature):
-    """Per-row sampling: temperature <= 0 -> greedy. logits [B, V],
-    temperature [B] f32. Returns int32 [B]."""
+    """Per-row sampling: temperature <= 0 -> greedy. logits [B, ..., V],
+    temperature [B] f32 (broadcast over inner dims, e.g. codebooks).
+    Returns int32 [B, ...]. The single sampling implementation for both
+    the engine and the python-loop backend (launch/serve.py)."""
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    t = temperature.reshape(temperature.shape + (1,) * (greedy.ndim - 1))
+    scaled = logits / jnp.maximum(t, 1e-6)[..., None]
     sampled = jax.random.categorical(key, scaled).astype(jnp.int32)
-    return jnp.where(temperature > 0.0, sampled, greedy)
+    return jnp.where(t > 0.0, sampled, greedy)
+
+
+def make_prefill_sample(cfg: ModelConfig, capacity: int):
+    """Jit-able admission step: ragged prefill + on-device first-token
+    sampling in one dispatch. (params, batch{tokens [N,S], lengths [N]},
+    key, temperature [N]) -> (tok0 [N], per-slot cache). Full-vocab
+    logits never leave the device — the host syncs only tok0."""
+    prefill = steps_mod.make_prefill_step(cfg, capacity=capacity)
+
+    def prefill_sample(params, batch, key, temperature):
+        logits, cache = prefill(params, batch)
+        return sample_tokens(key, logits, temperature), cache
+
+    return prefill_sample
+
+
+def make_slot_insert(cfg: ModelConfig):
+    """Jit-able batched slot admission: scatter N prefilled requests (an
+    N-row per-slot cache) into rows `slots` [N] of the big cache + the
+    slot-state arrays. `slots` is traced, so one compilation per batch
+    size N covers every placement of that many rows."""
+
+    def insert(cache, state, slots, small_cache, slot_vals):
+        layers = jax.tree.map(
+            lambda big, sm: big.at[:, slots].set(sm.astype(big.dtype)),
+            cache["layers"], small_cache["layers"])
+        new_cache = {"layers": layers,
+                     "cur": cache["cur"].at[slots].set(small_cache["cur"])}
+        if "k_pos" in cache:
+            new_cache["k_pos"] = cache["k_pos"].at[slots].set(
+                small_cache["k_pos"])
+        new_state = dict(state)
+        for name, val in slot_vals.items():
+            new_state[name] = state[name].at[slots].set(
+                val.astype(state[name].dtype))
+        return new_cache, new_state
+
+    return insert
 
 
 def make_decode_chunk(cfg: ModelConfig, n_steps: int):
@@ -76,30 +131,6 @@ def make_decode_chunk(cfg: ModelConfig, n_steps: int):
     return chunk
 
 
-def make_slot_insert(cfg: ModelConfig):
-    """Jit-able slot admission: write one prefilled request (a B=1
-    per-slot cache) into row `slot` of the big cache + slot-state arrays.
-    `slot` is traced, so one compilation covers every slot index."""
-
-    def insert(cache, state, slot, small_cache, slot_vals):
-        upd = jax.lax.dynamic_update_slice_in_dim
-        layers = jax.tree.map(
-            lambda big, sm: upd(big, sm.astype(big.dtype), slot, axis=1),
-            cache["layers"], small_cache["layers"])
-        new_cache = {"layers": layers,
-                     "cur": upd(cache["cur"], small_cache["cur"], slot, 0)}
-        if "k_pos" in cache:
-            new_cache["k_pos"] = upd(cache["k_pos"], small_cache["k_pos"],
-                                     slot, 0)
-        new_state = dict(state)
-        for name, val in slot_vals.items():
-            new_state[name] = upd(state[name],
-                                  val.astype(state[name].dtype)[None], slot, 0)
-        return new_cache, new_state
-
-    return insert
-
-
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     slots: int = 4              # decode batch width (fixed)
@@ -107,6 +138,11 @@ class EngineConfig:
     max_len: int = 512          # prompt + generation bound per request
     chunk: int = 8              # in-jit decode steps per host dispatch
     min_bucket: int = 16        # smallest prefill bucket
+    admission: str = "batched"  # "batched": up to len(free_slots) same-
+                                # bucket requests per prefill dispatch;
+                                # "serial": one request per dispatch (the
+                                # PR-2 baseline granularity, kept for
+                                # benchmarking)
     seed: int = 0
 
     def __post_init__(self):
@@ -117,6 +153,9 @@ class EngineConfig:
             # zero slots/chunk would make run() spin without progress
             raise ValueError(f"slots ({self.slots}) and chunk "
                              f"({self.chunk}) must be >= 1")
+        if self.admission not in ("batched", "serial"):
+            raise ValueError(f"admission must be 'batched' or 'serial', "
+                             f"got {self.admission!r}")
 
 
 @dataclasses.dataclass
@@ -124,6 +163,8 @@ class EngineStats:
     prefill_s: float = 0.0
     prefill_tokens: int = 0        # real prompt tokens prefilled
     prefill_padded_tokens: int = 0  # incl. bucket padding
+    prefill_batches: int = 0       # admission dispatches
+    prefill_requests: int = 0      # requests admitted across dispatches
     decode_s: float = 0.0
     decode_chunks: int = 0
     decode_steps: int = 0          # chunks * chunk (batch-wide steps)
@@ -144,24 +185,33 @@ class ServeEngine:
     >>> eng = ServeEngine(cfg, params, EngineConfig(slots=4))
     >>> eng.submit([1, 2, 3], max_new=16)
     >>> done = eng.run()          # list[Completion], uid order
+
+    With ``mesh`` (and optionally ``rules``) the whole serving datapath —
+    prefill+sample, slot insert, decode chunks — runs under explicit
+    NamedShardings resolved from the model's logical axes, and the
+    parameters/cache are placed onto the mesh at construction. Output is
+    token-identical to single-device serving (greedy; verified in
+    tests/test_serve_tp.py on a forced multi-device host).
     """
 
-    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig = None):
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig = None,
+                 *, mesh=None, rules: dict | None = None):
         if cfg.n_codebooks > 1:
             raise NotImplementedError(
                 "multi-codebook decode is not slot-batched; use the "
                 "python-loop serve path (launch/serve.py)")
         self.cfg = cfg
         self.ecfg = ecfg or EngineConfig()
-        self.params = params
         self.capacity = M.cache_capacity(cfg, self.ecfg.max_len)
         # SSM/conv state is contaminated by trailing pad tokens, so
         # stateful archs prefill at exact prompt lengths (scheduler.py)
         self._exact_buckets = cfg.use_mamba or cfg.parallel_mamba
 
         B = self.ecfg.slots
-        self.cache = M.init_cache(cfg, B, self.ecfg.max_len, per_slot=True)
-        self.state = {
+        self.mesh = mesh
+        self.rules = part.serve_rules(rules) if mesh is not None else None
+        cache = M.init_cache(cfg, B, self.ecfg.max_len, per_slot=True)
+        state = {
             "tok": jnp.zeros((B,), jnp.int32),
             "key": jax.random.key(self.ecfg.seed),
             "emitted": jnp.zeros((B,), jnp.int32),
@@ -172,16 +222,54 @@ class ServeEngine:
         }
         self._key = jax.random.key(self.ecfg.seed + 1)
 
-        self._prefill = jax.jit(
-            steps_mod.make_prefill_step(cfg, capacity=self.capacity))
-        self._insert = jax.jit(make_slot_insert(cfg), donate_argnums=(0, 1))
-        self._decode = jax.jit(make_decode_chunk(cfg, self.ecfg.chunk),
-                               donate_argnums=(1, 2))
+        prefill = make_prefill_sample(cfg, self.capacity)
+        insert = make_slot_insert(cfg)
+        decode = make_decode_chunk(cfg, self.ecfg.chunk)
+
+        if mesh is None:
+            self.params, self.cache, self.state = params, cache, state
+            self._prefill = jax.jit(prefill)
+            self._insert = jax.jit(insert, donate_argnums=(0, 1))
+            self._decode = jax.jit(decode, donate_argnums=(1, 2))
+        else:
+            psh, csh, repl = steps_mod.serve_shardings(
+                cfg, B, self.ecfg.max_len, mesh, self.rules)
+            ssh = {name: repl for name in state}
+            vsh = {name: repl for name in
+                   ("tok", "emitted", "active", "budget", "temp", "eos")}
+            self.params = jax.device_put(params, psh)
+            self.cache = jax.device_put(cache, csh)
+            self.state = jax.device_put(state, ssh)
+            self._prefill = jax.jit(
+                self._under_rules(prefill),
+                in_shardings=(psh, {"tokens": repl, "lengths": repl},
+                              repl, repl),
+                out_shardings=(repl, csh))
+            self._insert = jax.jit(
+                self._under_rules(insert),
+                in_shardings=(csh, ssh, repl, csh, vsh),
+                out_shardings=(csh, ssh), donate_argnums=(0, 1))
+            self._decode = jax.jit(
+                self._under_rules(decode),
+                in_shardings=(psh, csh, ssh),
+                out_shardings=(csh, ssh, repl), donate_argnums=(1, 2))
 
         self.sched = FifoScheduler(B)
         self.stats = EngineStats()
         self.completions: list[Completion] = []
         self._uid = 0
+
+    def _under_rules(self, fn):
+        """Trace `fn` under this engine's (mesh, rules) context so the
+        model's logical_constraint annotations resolve; the context
+        manager only runs at trace time, cached calls skip it."""
+        mesh, rules = self.mesh, self.rules
+
+        def traced(*args):
+            with part.axis_rules(mesh, rules):
+                return fn(*args)
+
+        return traced
 
     # -- request intake ----------------------------------------------------
 
@@ -205,56 +293,80 @@ class ServeEngine:
 
     # -- admission ---------------------------------------------------------
 
-    def _admit(self, slot: int, req: Request) -> None:
-        L = len(req.tokens)
-        bucket = bucket_len(L, min_bucket=self.ecfg.min_bucket,
-                            max_len=self.ecfg.max_prompt_len,
-                            exact=self._exact_buckets)
-        padded = np.zeros((1, bucket), np.int32)
-        padded[0, :L] = req.tokens
+    def _bucket_of(self, length: int) -> int:
+        return bucket_len(length, min_bucket=self.ecfg.min_bucket,
+                          max_len=self.ecfg.max_prompt_len,
+                          exact=self._exact_buckets)
+
+    def _admit(self, slots: list, reqs: list) -> None:
+        """Admit `reqs` (same prefill bucket) into free rows `slots[:N]`:
+        one ragged prefill dispatch with on-device first-token sampling,
+        one multi-row slot insert. Only the [N] tok0 vector is synced."""
+        N = len(reqs)
+        lens = [len(r.tokens) for r in reqs]
+        bucket = self._bucket_of(lens[0])
+        padded = np.zeros((N, bucket), np.int32)
+        for i, r in enumerate(reqs):
+            padded[i, :lens[i]] = r.tokens
         batch = {"tokens": jnp.asarray(padded),
-                 "lengths": jnp.asarray([L], jnp.int32)}
+                 "lengths": jnp.asarray(lens, jnp.int32)}
+        self._key, sub = jax.random.split(self._key)
+        temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
 
         t0 = time.perf_counter()
-        logits, small_cache = self._prefill(self.params, batch)
-        logits = jax.block_until_ready(logits)
+        tok0, small_cache = self._prefill(self.params, batch, sub, temps)
+        tok0 = np.asarray(tok0)                            # [N] ints; syncs
         now = time.perf_counter()
         self.stats.prefill_s += now - t0
-        self.stats.prefill_tokens += L
-        self.stats.prefill_padded_tokens += bucket
+        self.stats.prefill_tokens += sum(lens)
+        self.stats.prefill_padded_tokens += N * bucket
+        self.stats.prefill_batches += 1
+        self.stats.prefill_requests += N
 
-        self._key, sub = jax.random.split(self._key)
-        temp = jnp.full((1,), req.temperature, jnp.float32)
-        tok0 = int(sample_tokens(sub, logits, temp)[0])
-        budget = min(req.max_new, self.ecfg.max_len - L)
+        budgets = [min(r.max_new, self.ecfg.max_len - L)
+                   for r, L in zip(reqs, lens)]
+        # single-token requests finish at admission and never occupy a
+        # slot's scheduler binding; when the batch has survivors their
+        # dead rows still ride the one batched insert (active=False) and
+        # are fully overwritten by the row's next occupant, so nothing
+        # can leak — an all-dead batch skips the insert entirely
+        live = np.ones(N, bool)
+        for i, (req, t, budget) in enumerate(zip(reqs, tok0, budgets)):
+            if int(t) == req.eos_id or budget <= 1:
+                reason = "eos" if int(t) == req.eos_id else "length"
+                self._complete(req, [int(t)], reason, admitted_at=now)
+                live[i] = False
 
-        if tok0 == req.eos_id or budget <= 1:
-            # single-token request: finished at admission, slot stays free
-            reason = "eos" if tok0 == req.eos_id else "length"
-            self._complete(req, [tok0], reason, admitted_at=now)
-            return
-
+        if not live.any():
+            return                      # nothing survives: skip the insert
         slot_vals = {
-            "tok": jnp.asarray(tok0, jnp.int32),
-            "emitted": jnp.asarray(1, jnp.int32),
-            "active": jnp.asarray(True),
-            "budget": jnp.asarray(budget, jnp.int32),
-            "temp": jnp.asarray(req.temperature, jnp.float32),
-            "eos": jnp.asarray(req.eos_id, jnp.int32),
+            "tok": jnp.asarray(tok0.astype(np.int32)),
+            "emitted": jnp.ones((N,), jnp.int32),
+            "active": jnp.asarray(live),
+            "budget": jnp.asarray(budgets, jnp.int32),
+            "temp": temps,
+            "eos": jnp.asarray([r.eos_id for r in reqs], jnp.int32),
         }
         self.cache, self.state = self._insert(
-            self.cache, self.state, jnp.int32(slot), small_cache, slot_vals)
-        self.sched.bind(slot, SlotRun(request=req, tokens=[tok0],
-                                      admitted_at=now))
+            self.cache, self.state,
+            jnp.asarray(slots[:N], jnp.int32), small_cache, slot_vals)
+        for i in np.nonzero(live)[0]:
+            self.sched.bind(slots[i], SlotRun(
+                request=reqs[i], tokens=[int(tok0[i])], admitted_at=now))
 
     def _admit_ready(self) -> None:
         while True:
             free = self.sched.free_slots()
             if not free or not self.sched.queue:
                 return
-            # a request that finishes at admission leaves its slot free,
-            # so the loop re-checks rather than iterating a fixed list
-            self._admit(free[0], self.sched.next_request())
+            # early-completed requests leave their slots free, so the
+            # loop re-checks free slots and the (new) queue head's bucket
+            # each round rather than iterating a fixed plan
+            width = 1 if self.ecfg.admission == "serial" else len(free)
+            reqs = self.sched.next_batch(width, self._bucket_of)
+            if not reqs:
+                return
+            self._admit(free, reqs)
 
     def _complete(self, req: Request, tokens, reason: str, *,
                   admitted_at: float) -> None:

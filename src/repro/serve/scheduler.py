@@ -26,15 +26,17 @@ def next_pow2(n: int) -> int:
 
 def bucket_len(length: int, *, min_bucket: int = 16, max_len: int,
                exact: bool = False) -> int:
-    """Padded prompt length for a real prompt of `length` tokens."""
+    """Padded prompt length for a real prompt of `length` tokens.
+
+    Validation is shared by both bucketing policies: the exact-length
+    (SSM) path rejects over-long prompts exactly like the pow2 path."""
     if length > max_len:
-        raise ValueError(f"prompt length {length} exceeds max_prompt_len "
-                         f"{max_len}")
+        raise ValueError(f"prompt length {length} exceeds max_len {max_len}")
     if exact:
         return length
     # top bucket is clamped to max_len itself (not its pow2 ceiling):
     # nothing requires it to be a power of two, and padding past
-    # max_prompt_len would only waste prefill compute
+    # max_len would only waste prefill compute
     return min(max(next_pow2(length), min_bucket), max_len)
 
 
@@ -93,6 +95,28 @@ class FifoScheduler:
 
     def next_request(self) -> Optional[Request]:
         return self.queue.popleft() if self.queue else None
+
+    def next_batch(self, n: int, bucket_of) -> list:
+        """Pop up to `n` requests that share the head request's prefill
+        bucket (``bucket_of``: prompt length -> padded length).
+
+        The queue head always leads — its bucket defines the batch, so a
+        request can never be starved by later arrivals — and requests
+        left behind keep their relative order. Grouping by bucket is what
+        lets the engine prefill the whole batch in ONE ragged dispatch
+        instead of one dispatch per request."""
+        if n < 1 or not self.queue:
+            return []
+        head_bucket = bucket_of(len(self.queue[0].tokens))
+        taken, rest = [], []
+        while self.queue:
+            req = self.queue.popleft()
+            if len(taken) < n and bucket_of(len(req.tokens)) == head_bucket:
+                taken.append(req)
+            else:
+                rest.append(req)
+        self.queue.extend(rest)
+        return taken
 
     def bind(self, slot: int, run: SlotRun) -> None:
         assert self.slots[slot] is None, f"slot {slot} busy"

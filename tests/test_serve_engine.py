@@ -51,10 +51,10 @@ def setup(arch, **cfg_over):
 
 
 def serve(cfg, params, prompts, gen, *, slots=2, chunk=4, max_prompt=64,
-          **submit_kw):
+          admission="batched", **submit_kw):
     eng = ServeEngine(cfg, params, EngineConfig(
         slots=slots, max_prompt_len=max_prompt, max_len=max_prompt + gen,
-        chunk=chunk))
+        chunk=chunk, admission=admission))
     for p in prompts:
         eng.submit(p, max_new=gen, **submit_kw)
     return eng.run(), eng
@@ -165,6 +165,109 @@ class TestSamplingAndBackends:
             assert c.tokens == ref, (c.uid, c.tokens, ref)
 
 
+class TestBatchedAdmission:
+    def test_batched_matches_serial_token_for_token(self):
+        """Bucket-grouped multi-row admission (one ragged prefill dispatch
+        + one multi-row insert per round) must emit exactly what
+        one-request-at-a-time admission emits, request by request."""
+        cfg, params = setup("qwen3-0.6b")
+        prompts = make_prompts(cfg, [9, 12, 17, 30, 5, 11, 13, 8], seed=4)
+        gen = 8
+        done_b, eng_b = serve(cfg, params, prompts, gen, slots=4)
+        done_s, eng_s = serve(cfg, params, prompts, gen, slots=4,
+                              admission="serial")
+        assert [c.tokens for c in done_b] == [c.tokens for c in done_s]
+        # batching must actually group: strictly fewer prefill dispatches
+        # than requests, while serial admission pays one per request
+        assert eng_s.stats.prefill_batches == len(prompts)
+        assert eng_b.stats.prefill_batches < len(prompts)
+        assert eng_b.stats.prefill_requests == len(prompts)
+
+    def test_same_bucket_requests_admit_in_one_dispatch(self):
+        """4 free slots + 4 same-bucket prompts -> exactly one prefill
+        dispatch admits all of them."""
+        cfg, params = setup("qwen3-0.6b")
+        prompts = make_prompts(cfg, [9, 10, 12, 14])    # all bucket 16
+        done, eng = serve(cfg, params, prompts, 6, slots=4)
+        assert eng.stats.prefill_batches == 1
+        assert eng.stats.prefill_requests == 4
+        for c, p in zip(done, prompts):
+            ref = lockstep_reference(cfg, params, p, 6, eng.capacity)
+            assert c.tokens == ref
+
+    def test_exact_buckets_batch_equal_lengths_only(self):
+        """SSM archs prefill at exact lengths; the batch pop groups only
+        equal-length prompts, and outputs still match the reference."""
+        cfg, params = setup("falcon-mamba-7b")
+        prompts = make_prompts(cfg, [11, 11, 7, 11], seed=6)
+        gen = 6
+        done, eng = serve(cfg, params, prompts, gen, slots=4)
+        # head bucket (len 11) groups the three 11s; the 7 admits alone
+        assert eng.stats.prefill_batches == 2
+        for c, p in zip(done, prompts):
+            ref = lockstep_reference(cfg, params, p, gen, eng.capacity)
+            assert c.tokens == ref, (c.uid, c.tokens, ref)
+
+
+class TestServeBatchWrapper:
+    def test_eos_ragged_completions_round_trip_padded(self):
+        """serve_batch must survive rows stopping early: every returned
+        row is right-padded with 0 to gen_tokens, the engine and python
+        backends agree, and pre-eos prefixes match the eos-free run."""
+        from repro.launch.serve import _mask_after_eos, serve_batch
+        cfg, params = setup("qwen3-0.6b")
+        rng = np.random.RandomState(9)
+        prompts = jnp.asarray(
+            rng.randint(0, cfg.vocab_size, (3, 10)).astype(np.int32))
+        gen = 10
+        base, _ = serve_batch(cfg, params, prompts, gen)
+        base = np.asarray(base)
+        # pick an eos that actually truncates some row mid-stream
+        eos = next(int(t) for t in base[:, 2:-1].reshape(-1) if t != 0)
+        expected = _mask_after_eos(base, eos)
+        assert (expected != base).any(), "eos must truncate something"
+        for backend in ("engine", "python"):
+            toks, _ = serve_batch(cfg, params, prompts, gen,
+                                  backend=backend, eos_id=eos)
+            toks = np.asarray(toks)
+            assert toks.shape == (3, gen)
+            np.testing.assert_array_equal(toks, expected, err_msg=backend)
+
+    def test_python_backend_uses_engine_sampler(self):
+        """The two backends share one sampling implementation: greedy
+        streams agree token-for-token on the same workload."""
+        from repro.launch.serve import serve_batch
+        cfg, params = setup("qwen3-0.6b")
+        rng = np.random.RandomState(3)
+        prompts = jnp.asarray(
+            rng.randint(0, cfg.vocab_size, (2, 12)).astype(np.int32))
+        te, _ = serve_batch(cfg, params, prompts, 8, backend="engine")
+        tp, _ = serve_batch(cfg, params, prompts, 8, backend="python")
+        np.testing.assert_array_equal(np.asarray(te), np.asarray(tp))
+
+    def test_python_fallback_refuses_nontrivial_mesh(self):
+        """A mesh that would be silently ignored must be rejected — the
+        pre-engine failure mode was --model-parallel doing nothing."""
+        from repro.launch.serve import serve_batch
+        cfg, params = setup("qwen3-0.6b")
+        prompts = jnp.zeros((2, 8), jnp.int32)
+
+        class FakeMesh:          # only .size is consulted before routing
+            size = 2
+
+        with pytest.raises(NotImplementedError, match="engine-only"):
+            serve_batch(cfg, params, prompts, 4, backend="python",
+                        mesh=FakeMesh())
+
+    def test_prefill_stats_guard_zero_division(self):
+        from repro.launch.serve import ServeStats
+        st = ServeStats(prefill_s=0.0, decode_s=0.0, n_prompts=2,
+                        prompt_len=8, generated=1, decode_steps=0,
+                        decode_tokens=0)
+        assert st.prefill_tokens_per_s == 0.0
+        assert st.decode_tokens_per_s == 0.0
+
+
 class TestScheduler:
     def test_bucketing(self):
         assert bucket_len(9, min_bucket=16, max_len=64) == 16
@@ -175,8 +278,41 @@ class TestScheduler:
         # non-pow2 cap: the top bucket clamps to max_len itself
         assert bucket_len(33, min_bucket=16, max_len=48) == 48
         assert bucket_len(48, min_bucket=16, max_len=48) == 48
-        with pytest.raises(ValueError):
-            bucket_len(65, min_bucket=16, max_len=64)
+        # the error names the actual parameter, and the exact-length
+        # (SSM) path validates identically to the pow2 path
+        for exact in (False, True):
+            with pytest.raises(ValueError, match="max_len"):
+                bucket_len(65, min_bucket=16, max_len=64, exact=exact)
+
+    def test_next_batch_groups_by_head_bucket(self):
+        def bucket_of(n):
+            return bucket_len(n, min_bucket=16, max_len=64)
+
+        s = FifoScheduler(4)
+        lens = [9, 30, 12, 14, 40, 10]      # buckets 16/32/16/16/64/16
+        for i, n in enumerate(lens):
+            s.submit(Request(uid=i, tokens=[0] * n, max_new=2))
+        batch = s.next_batch(3, bucket_of)
+        # head (uid 0, bucket 16) leads; uids 2 and 3 share its bucket
+        assert [r.uid for r in batch] == [0, 2, 3]
+        # the rest keep FIFO order; the new head's bucket (32) leads next
+        assert [r.uid for r in s.queue] == [1, 4, 5]
+        assert [r.uid for r in s.next_batch(4, bucket_of)] == [1]
+        assert [r.uid for r in s.next_batch(4, bucket_of)] == [4]
+        assert [r.uid for r in s.next_batch(4, bucket_of)] == [5]
+        assert s.next_batch(4, bucket_of) == []
+
+    def test_next_batch_respects_width(self):
+        def bucket_of(n):
+            return bucket_len(n, min_bucket=16, max_len=64)
+
+        s = FifoScheduler(2)
+        for i in range(5):
+            s.submit(Request(uid=i, tokens=[0] * 8, max_new=2))
+        assert [r.uid for r in s.next_batch(2, bucket_of)] == [0, 1]
+        assert [r.uid for r in s.next_batch(2, bucket_of)] == [2, 3]
+        assert [r.uid for r in s.next_batch(0, bucket_of)] == []
+        assert [r.uid for r in s.next_batch(2, bucket_of)] == [4]
 
     def test_fifo_slot_lifecycle(self):
         s = FifoScheduler(2)

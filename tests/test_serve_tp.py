@@ -1,0 +1,64 @@
+"""Tensor-parallel serving equivalence on a forced multi-device host.
+
+The mesh-aware ServeEngine must be a pure layout change: serving under
+TP=2 and TP=4 emits token-for-token (greedy) what TP=1 emits. jax locks
+the device count at first init, and the main pytest process has long
+since initialized a 1-CPU backend — so the check runs in ONE subprocess
+that sets ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before
+importing jax (the launch/dryrun.py pattern) and serves the same
+workload at every TP width.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import serve_batch
+from repro.models import model as M
+from repro.parallel import partition as part
+
+assert len(jax.devices()) == 8, jax.devices()
+cfg = registry.get("qwen3-0.6b", smoke=True)
+params, _ = M.materialize_params(cfg, seed=0)
+params = jax.tree.map(
+    lambda a: a.astype(jnp.bfloat16)
+    if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
+rng = np.random.RandomState(0)
+prompts = jnp.asarray(rng.randint(0, cfg.vocab_size, (3, 12)).astype(np.int32))
+
+outs = {}
+for tp in (1, 2, 4):
+    mesh = make_host_mesh(1, tp)
+    assert dict(mesh.shape)["model"] == tp, mesh.shape
+    with part.axis_rules(mesh):
+        tokens, _ = serve_batch(cfg, params, prompts, 8, mesh=mesh)
+    outs[tp] = np.asarray(tokens)
+
+for tp in (2, 4):
+    assert np.array_equal(outs[tp], outs[1]), (
+        f"TP={tp} diverged from TP=1",
+        outs[tp].tolist(), outs[1].tolist())
+print("TP-IDENTITY-OK")
+"""
+
+
+def test_tp_serving_token_identical_to_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, cwd=REPO,
+        capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "TP-IDENTITY-OK" in proc.stdout
