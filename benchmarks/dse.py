@@ -1,0 +1,178 @@
+"""Design-space explorer: accuracy vs area vs speed across approximants.
+
+The DSE the related work describes (arXiv:1810.08650, arXiv:2007.11976)
+run against OUR stack: every registered approximant scheme is swept over
+its geometry knobs (LUT depth for cr_spline/pwl, depth x degree for
+poly, continued-fraction order for rational) and each design point is
+scored on the three axes that decide a hardware activation unit:
+
+  error    max / RMS vs exact tanh over the full Q2.13 input lattice,
+           end-to-end quantized (datapath='qout' — the paper's Tables
+           I/II convention, so the CR rows reproduce the paper);
+  area     NAND2-equivalent gates from the analytic model in
+           core/gatecount.py (applied uniformly, so relative
+           comparisons are meaningful);
+  speed    warmed wall-time of the scheme's single-pass Pallas epilogue
+           kernel at a fixed shape (interpret mode on CPU — relative
+           comparisons between schemes only, like kernel_bench).
+
+The 3-axis Pareto frontier is printed (and emitted under ``--json`` for
+the CI artifact). PASS gate: the flagship CR depth-64 point must land
+at one Q2.13 LSB of max error (paper Table II: 0.000122 = 2^-13), every
+point must have all three axes populated, and the full sweep must cover
+>= 12 points across >= 4 schemes.
+
+    PYTHONPATH=src python -m benchmarks.dse            # full sweep
+    PYTHONPATH=src python -m benchmarks.dse --reduced  # CI smoke
+    PYTHONPATH=src python -m benchmarks.dse --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import approximant as apx
+from repro.core import gatecount as gc
+from repro.core.error_analysis import tanh_error
+from repro.kernels import ops
+
+from .kernel_bench import _time
+
+LSB = 2.0 ** -13
+
+# (scheme, geometry) design points. cr_spline/pwl sweep the paper's four
+# LUT depths; poly sweeps segments x degree; rational sweeps the odd
+# continued-fraction orders (the monotone branch).
+FULL_SWEEP = (
+    [("cr_spline", dict(depth=d)) for d in (8, 16, 32, 64)]
+    + [("pwl", dict(depth=d)) for d in (8, 16, 32, 64)]
+    + [("poly", dict(depth=d, degree=g))
+       for d, g in ((4, 2), (4, 3), (8, 3), (16, 3))]
+    + [("rational", dict(degree=g)) for g in (3, 5, 7)]
+)
+
+# CI smoke: the PASS-gated CR points + every scheme at its
+# registry-declared representative geometry (a newly registered scheme
+# joins the reduced sweep automatically).
+REDUCED_SWEEP = (
+    [("cr_spline", dict(depth=d)) for d in (32, 64)]
+    + [(s, apx.get(s).default_geometry) for s in apx.schemes()
+       if s != "cr_spline"]
+)
+
+BENCH_SHAPE = (256, 512)
+
+
+def _time_kernel(scheme: str, geom: dict, x, reps: int = 3) -> float:
+    """Warmed wall-time via kernel_bench's shared timing helper, so DSE
+    and kernel_bench rows follow one methodology."""
+    def fn(v):
+        return ops.act(v, "tanh", method=scheme, depth=geom.get("depth", 32),
+                       degree=geom.get("degree", 3))
+    return _time(fn, x, reps=reps)
+
+
+def _pareto(rows: list[dict]) -> list[dict]:
+    """Non-dominated points on (max_err, gates, t_kernel_ms): a point is
+    dominated if another is <= on all three axes and < on at least one."""
+    keys = ("max_err", "gates", "t_kernel_ms")
+    out = []
+    for r in rows:
+        dominated = any(
+            all(o[k] <= r[k] for k in keys) and any(o[k] < r[k] for k in keys)
+            for o in rows)
+        if not dominated:
+            out.append(r)
+    return out
+
+
+def run(verbose: bool = True, reduced: bool = False,
+        json_path: str | None = None, reps: int = 3) -> dict:
+    sweep = REDUCED_SWEEP if reduced else FULL_SWEEP
+    key = jax.random.key(0)
+    x = jax.random.normal(key, BENCH_SHAPE, jnp.float32) * 2.0
+    rows = []
+    for scheme, geom in sweep:
+        depth = geom.get("depth", 32)
+        degree = geom.get("degree", 3)
+        spec = apx.spec_for(scheme, "tanh", depth=depth, degree=degree)
+        err = tanh_error(scheme, depth, datapath="qout", degree=degree)
+        area = gc.approximant_datapath(spec)
+        t_ms = _time_kernel(scheme, geom, x, reps=reps) * 1e3
+        rows.append(dict(
+            scheme=scheme, depth=depth, degree=degree,
+            params_shape=list(apx.get(scheme).params_shape(spec)),
+            rms_err=err.rms, max_err=err.max,
+            gates=round(area.gates), t_kernel_ms=t_ms))
+
+    pareto = _pareto(rows)
+    pareto_set = {(r["scheme"], r["depth"], r["degree"]) for r in pareto}
+
+    checks = []
+    n_schemes = len({r["scheme"] for r in rows})
+    if not reduced and (len(rows) < 12 or n_schemes < 4):
+        checks.append(f"sweep too small: {len(rows)} points / "
+                      f"{n_schemes} schemes (need >= 12 / >= 4)")
+    for r in rows:
+        if not all(np.isfinite([r["rms_err"], r["max_err"], r["gates"],
+                                r["t_kernel_ms"]])) or r["t_kernel_ms"] <= 0:
+            checks.append(f"unpopulated axes in {r}")
+    cr64 = [r for r in rows if r["scheme"] == "cr_spline" and r["depth"] == 64]
+    if not cr64:
+        checks.append("flagship cr_spline depth-64 point missing from sweep")
+    elif abs(cr64[0]["max_err"] - LSB) > 0.05 * LSB:
+        checks.append(
+            f"cr_spline depth-64 max error {cr64[0]['max_err']:.6e} is not "
+            f"one Q2.13 LSB (paper Table II: {LSB:.6e})")
+
+    status = "PASS" if not checks else "FAIL"
+    result = {"rows": rows, "pareto": pareto, "checks": checks,
+              "status": status, "reduced": reduced}
+
+    if verbose:
+        print("\n== Approximant design-space exploration "
+              f"({'reduced' if reduced else 'full'} sweep; Q2.13 qout "
+              "datapath; timings interpret-mode relative) ==")
+        print(f"{'scheme':>10} {'depth':>5} {'deg':>3} | {'RMS err':>9} "
+              f"{'max err':>9} | {'gates':>6} | {'t_kern':>9} | pareto")
+        for r in rows:
+            on = "*" if (r["scheme"], r["depth"], r["degree"]) in pareto_set \
+                else ""
+            print(f"{r['scheme']:>10} {r['depth']:5d} {r['degree']:3d} | "
+                  f"{r['rms_err']:9.6f} {r['max_err']:9.6f} | "
+                  f"{r['gates']:6d} | {r['t_kernel_ms']:7.1f}ms | {on:>3}")
+        print(f"Pareto frontier (err x gates x time): {len(pareto)} of "
+              f"{len(rows)} points")
+        for c in checks:
+            print("  CHECK FAILED:", c)
+        print(f"dse: {status}")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--reduced", action="store_true",
+                   help="CI smoke: one point per scheme + the gated CR rows")
+    p.add_argument("--json", nargs="?", const="-", default=None,
+                   help="emit JSON (to stdout, or to the given path)")
+    p.add_argument("--reps", type=int, default=3)
+    args = p.parse_args()
+    to_file = args.json if args.json not in (None, "-") else None
+    result = run(verbose=args.json != "-", reduced=args.reduced,
+                 json_path=to_file, reps=args.reps)
+    if args.json == "-":
+        print(json.dumps(result, indent=2))
+    if result["status"] != "PASS":
+        raise SystemExit("dse: FAIL")
+
+
+if __name__ == "__main__":
+    main()

@@ -51,7 +51,8 @@ def run(verbose: bool = True) -> dict:
             t_k = _time(lambda v, lk=lookup: ops.cr_act(v, lookup=lk), x)
             err = float(jnp.max(jnp.abs(
                 ops.cr_act(x, lookup=lookup) - ref.cr_act_ref(x, table))))
-            rows.append(dict(kernel="cr_act", lookup=lookup, shape=shape,
+            rows.append(dict(kernel="cr_act", scheme="cr_spline",
+                             lookup=lookup, shape=shape,
                              t_kernel_ms=t_k * 1e3, t_ref_ms=t_ref * 1e3,
                              max_abs_err=err))
     # fused GLU (distinct keys: wg == wu would mask gate/up operand swaps)
@@ -65,7 +66,8 @@ def run(verbose: bool = True) -> dict:
         t_k = _time(lambda a, b, c: ops.fused_glu(a, b, c), xs, wg, wu)
         err = float(jnp.max(jnp.abs(
             ops.fused_glu(xs, wg, wu) - ref.fused_glu_ref(xs, wg, wu, table))))
-        rows.append(dict(kernel="fused_glu", lookup="-", shape=(m, d, f),
+        rows.append(dict(kernel="fused_glu", scheme="cr_spline", lookup="-",
+                         shape=(m, d, f),
                          t_kernel_ms=t_k * 1e3, t_ref_ms=t_ref * 1e3,
                          max_abs_err=err))
 
@@ -78,7 +80,30 @@ def run(verbose: bool = True) -> dict:
         t_k = _time(lambda v, a=act: ops.act(v, a), x_epi)
         err = float(jnp.max(jnp.abs(
             ops.act(x_epi, act) - ref.act_ref(x_epi, act, etab))))
-        rows.append(dict(kernel="epilogue", lookup=act, shape=(256, 512),
+        rows.append(dict(kernel="epilogue", scheme="cr_spline", lookup=act,
+                         shape=(256, 512),
+                         t_kernel_ms=t_k * 1e3, t_ref_ms=t_ref * 1e3,
+                         max_abs_err=err))
+
+    # the tanh kernel under every other registered approximant scheme
+    # (scheme column segments cross-PR perf trajectories per approximant;
+    # reference = the scheme's own jnp block, so max|err| isolates the
+    # kernel lowering, not the approximation quality)
+    from repro.core import approximant as apx
+    for scheme in apx.schemes():
+        if scheme == "cr_spline":
+            continue                      # covered by the rows above
+        spec = apx.spec_for(scheme, "tanh", depth=32, degree=5)
+        params = jnp.asarray(apx.params_for(spec, "tanh"))
+        t_ref = _time(jax.jit(
+            lambda v, s=spec, p=params: apx.block(v, p, s)), x_epi)
+        t_k = _time(lambda v, s=scheme: ops.act(v, "tanh", method=s,
+                                                depth=32, degree=5), x_epi)
+        err = float(jnp.max(jnp.abs(
+            ops.act(x_epi, "tanh", method=scheme, depth=32, degree=5)
+            - apx.block(x_epi, params, spec))))
+        rows.append(dict(kernel="epilogue", scheme=scheme, lookup="tanh",
+                         shape=(256, 512),
                          t_kernel_ms=t_k * 1e3, t_ref_ms=t_ref * 1e3,
                          max_abs_err=err))
 
@@ -101,6 +126,7 @@ def run(verbose: bool = True) -> dict:
         err = float(jnp.max(jnp.abs(
             ops.fused_glu(xs, wg, wu, act="silu") - unfused(xs, wg, wu))))
         mlp_rows.append(dict(kernel="mlp_fused_vs_unfused",
+                             scheme="cr_spline",
                              shape=(m, d, f), act="silu",
                              t_fused_ms=t_fused * 1e3,
                              t_unfused_ms=t_unfused * 1e3,
@@ -125,7 +151,8 @@ def run(verbose: bool = True) -> dict:
     if verbose:
         print("\n== Pallas kernels (interpret mode; timings are relative) ==")
         for r in rows:
-            print(f"{r['kernel']:>10}/{r['lookup']:<9} {str(r['shape']):<18}"
+            print(f"{r['kernel']:>10}[{r['scheme']}]/{r['lookup']:<9} "
+                  f"{str(r['shape']):<18}"
                   f" kernel {r['t_kernel_ms']:9.1f} ms | jnp-ref "
                   f"{r['t_ref_ms']:7.1f} ms | max|err| {r['max_abs_err']:.2e}")
         for r in mlp_rows:

@@ -9,6 +9,8 @@ Benches:
     table3          paper Table III (area via gate model + accuracy)
     activations     derived-activation accuracy (beyond-paper)
     kernel_bench    Pallas kernel vs oracle timings + VMEM budget
+    dse             approximant design-space explorer: error x gates x
+                    wall-time per scheme, Pareto frontier
     roofline_table  §Roofline summary from the dry-run artifacts
     serve_bench     continuous-batching engine: scan-vs-python decode,
                     offered-load sweep (p50/p99 latency)
@@ -18,7 +20,7 @@ from __future__ import annotations
 import sys
 import time
 
-from . import (activations, kernel_bench, roofline_table, serve_bench,
+from . import (activations, dse, kernel_bench, roofline_table, serve_bench,
                table1_2, table3)
 
 
@@ -35,6 +37,7 @@ BENCHES = {
     "table3": lambda: table3.run(),
     "activations": lambda: activations.run(),
     "kernel_bench": lambda: kernel_bench.run(),
+    "dse": lambda: dse.run(),
     "roofline_table": _roofline_both,
     "serve_bench": lambda: serve_bench.run(),
 }

@@ -10,6 +10,12 @@ compares loss trajectories. The paper argues its unit's ~1e-4 error is
 accurate enough for NN accelerators; here that claim is validated at the
 training level, not just the per-op level: final losses agree within
 noise while a deliberately coarse engine (taylor-2) visibly degrades.
+
+``--method`` widens the sweep across the Approximant registry: pass a
+registered scheme (pwl | poly | rational | cr_spline) or ``all`` to
+train under that scheme's engine too, and to print the per-scheme
+error/gates table (Q2.13 qout datapath + NAND2 model) next to the
+existing CR rows before training starts.
 """
 import argparse
 import dataclasses
@@ -19,7 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
+from repro.core import approximant as apx
+from repro.core import gatecount as gc
 from repro.core.activations import ActivationConfig
+from repro.core.error_analysis import tanh_error
 from repro.data import DataConfig, SyntheticPipeline
 from repro.launch import steps as steps_mod
 from repro.models import model as M
@@ -41,11 +50,37 @@ def train_once(cfg, steps: int, batch: int, seq: int, seed: int = 0):
     return np.asarray(losses)
 
 
+# representative geometry per scheme, straight from the registry
+SCHEME_GEOM = {s: apx.get(s).default_geometry for s in apx.schemes()}
+
+
+def scheme_table(schemes):
+    """Per-scheme error/gates rows (Q2.13 qout; NAND2 model), with the
+    paper's CR rows always present as the baseline."""
+    print(f"\n{'scheme':>12} {'depth':>5} {'deg':>3} | {'RMS err':>9} "
+          f"{'max err':>9} | {'gates':>6}")
+    from repro.core.activations import scheme_of
+    rows = [("cr_spline", dict(depth=32)), ("cr_spline", dict(depth=64))]
+    rows += [(scheme_of(s) or s, SCHEME_GEOM.get(scheme_of(s) or s, {}))
+             for s in schemes if scheme_of(s) != "cr_spline"]
+    for scheme, geom in rows:
+        depth, degree = geom.get("depth", 32), geom.get("degree", 3)
+        err = tanh_error(scheme, depth, datapath="qout", degree=degree)
+        spec = apx.spec_for(scheme, "tanh", depth=depth, degree=degree)
+        gates = round(gc.approximant_datapath(spec).gates)
+        print(f"{scheme:>12} {depth:5d} {degree:3d} | {err.rms:9.6f} "
+              f"{err.max:9.6f} | {gates:6d}")
+    print()
+
+
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--steps", type=int, default=80)
     p.add_argument("--batch", type=int, default=8)
     p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--method", default=None,
+                   help="also sweep a registered approximant scheme "
+                        "(pwl|poly|rational|cr_spline) or 'all'")
     args = p.parse_args()
 
     base = registry.get("olmo-1b", smoke=True)
@@ -56,6 +91,19 @@ def main():
         "pwl-32": ActivationConfig(impl="pwl", depth=32),
         "taylor-2 (coarse)": ActivationConfig(impl="taylor", taylor_terms=2),
     }
+    if args.method:
+        schemes = (list(apx.schemes()) if args.method == "all"
+                   else [args.method])
+        scheme_table(schemes)
+        from repro.core.activations import scheme_of
+        for s in schemes:
+            s = scheme_of(s) or s
+            if s in ("cr_spline", "pwl"):
+                continue             # already in the base sweep (cr / pwl-32)
+            geom = SCHEME_GEOM.get(s, {})
+            engines[f"{s} (approximant)"] = ActivationConfig(
+                impl=s, depth=geom.get("depth", 32),
+                degree=geom.get("degree", 3))
     final = {}
     for name, act in engines.items():
         cfg = dataclasses.replace(base, activation=act)

@@ -23,14 +23,36 @@ def fused_of(cfg: ModelConfig) -> ModelConfig:
     nonlinearities through single-pass epilogue kernels. Identity on
     configs with nothing to fuse (no gated FFN, or an FFN activation
     with no spline epilogue) — the result always passes the
-    launch/steps.py fusion validation."""
+    launch/steps.py fusion validation. The scheme stays whatever the
+    config's ``act_impl``/engine selects (paper CR by default)."""
+    from repro.core.activations import scheme_of
     from repro.kernels.epilogue import EPILOGUES
     if not (cfg.glu and cfg.has_ffn and cfg.mlp_act in EPILOGUES):
         return cfg
+    # scheme precedence: act_impl override > an engine that is already an
+    # approximant scheme > the paper's CR default — never silently swap a
+    # selected non-CR scheme for the spline
+    impl = cfg.act_impl or (
+        cfg.activation.impl if scheme_of(cfg.activation.impl) else "cr")
+    if scheme_of(impl) is None:     # non-approximant override: honestly
+        return cfg                  # leave the config unfused
     return dataclasses.replace(
         cfg, fuse_mlp=True,
-        activation=dataclasses.replace(cfg.activation, impl="cr",
+        activation=dataclasses.replace(cfg.activation, impl=impl,
                                        use_kernel=True))
+
+
+def act_impl_of(cfg: ModelConfig, scheme: str,
+                use_kernel: bool | None = None) -> ModelConfig:
+    """Run ``cfg`` under a different approximant scheme (the ``--act-impl``
+    flag): sets ``act_impl`` (validated at step-build time in
+    launch/steps.py) and, unless overridden, keeps the engine's kernel
+    routing as configured. ``use_kernel=True`` additionally forces every
+    nonlinearity through the scheme's Pallas epilogue kernel."""
+    act = cfg.activation
+    if use_kernel is not None:
+        act = dataclasses.replace(act, use_kernel=use_kernel)
+    return dataclasses.replace(cfg, act_impl=scheme, activation=act)
 
 
 def smoke_of(cfg: ModelConfig, **extra) -> ModelConfig:

@@ -14,13 +14,16 @@ from .catmull_rom import (
     interpolate_fixed,
     interpolate_pwl,
 )
+from .approximant import ApproxSpec
 from .activations import ActivationConfig, ActivationEngine, get_engine, tanh_table
 from .error_analysis import PAPER_TABLE_1_2, ErrorStats, table_1_2, tanh_error
+from . import approximant
 
 __all__ = [
     "Q2_13", "QFormat", "quantize", "dequantize", "representable_grid",
     "BASIS", "SplineTable", "FixedTable", "basis_weights", "build_table",
     "build_fixed_table", "interpolate", "interpolate_fixed", "interpolate_pwl",
+    "ApproxSpec", "approximant",
     "ActivationConfig", "ActivationEngine", "get_engine", "tanh_table",
     "PAPER_TABLE_1_2", "ErrorStats", "table_1_2", "tanh_error",
 ]

@@ -4,14 +4,25 @@ routed through here, selected by config.
 Backends
 --------
   exact     jnp reference (what a float accelerator computes)
-  cr        Catmull-Rom spline interpolation (the paper, float datapath)
+  cr        Catmull-Rom spline interpolation (the paper, float datapath;
+            alias of the registered ``cr_spline`` approximant scheme)
   cr_fixed  bit-accurate Q2.13 emulation of the paper's Fig. 3 circuit,
             with a straight-through float-spline JVP so training works
-  pwl       piecewise-linear over the same knots (paper's baseline)
+  pwl       piecewise-linear over the same knots (paper's baseline; also
+            a registered approximant scheme with a PLAN-style kernel)
+  poly      piecewise near-minimax polynomial, Horner datapath
+            (approximant scheme; degree = ActivationConfig.degree)
+  rational  Padé + Newton-reciprocal datapath, no divider
+            (approximant scheme; CF order = ActivationConfig.degree)
   region    Zamanlooy-style three-region approximation [6] (pass /
             processing / saturation), implemented at configurable precision
   taylor    Adnan-style truncated Taylor series [8]
   base2     Gomar-style base-2 exponential approximation [9]
+
+Any impl that maps to a registered approximant scheme (cr, pwl, poly,
+rational — see ``scheme_of``) supports ``use_kernel=True``: every
+nonlinearity then lowers to ONE Pallas epilogue kernel launch carrying
+that scheme's datapath.
 
 Functions: tanh, sigmoid, silu, gelu_tanh, softplus. sigmoid/silu/softplus
 derive from the tanh table via identities, mirroring how one hardware tanh
@@ -32,25 +43,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import approximant
 from . import catmull_rom as cr
 from .fixed_point import dequantize, quantize
 
 SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
 
 
+def scheme_of(impl: str) -> str | None:
+    """The registered approximant scheme behind an engine impl (None for
+    non-approximant backends: exact, cr_fixed, region, taylor, base2)."""
+    if impl == "cr":
+        return "cr_spline"
+    return impl if impl in approximant.schemes() else None
+
+
 @dataclasses.dataclass(frozen=True)
 class ActivationConfig:
     """How the framework computes nonlinearities (a model-config field)."""
 
-    impl: str = "exact"          # exact|cr|cr_fixed|pwl|region|taylor|base2
+    impl: str = "exact"          # exact|cr|cr_fixed|pwl|poly|rational|
+                                 # region|taylor|base2 (or any registered
+                                 # approximant scheme name)
     depth: int = 32              # LUT depth (paper's flagship: 32)
     x_max: float = 4.0           # table range for tanh (paper: 4.0)
+    degree: int = 3              # poly: per-segment degree; rational:
+                                 # continued-fraction order
     taylor_terms: int = 3        # for impl="taylor"
-    use_kernel: bool = False     # impl="cr": route EVERY nonlinearity
-                                 # through a single-pass Pallas epilogue
-                                 # kernel (kernels/epilogue.py)
+    use_kernel: bool = False     # approximant impls: route EVERY
+                                 # nonlinearity through a single-pass
+                                 # Pallas epilogue kernel carrying the
+                                 # scheme's datapath (kernels/epilogue.py)
 
     def tag(self) -> str:
+        if self.impl in ("poly", "rational"):
+            return f"{self.impl}-d{self.depth}-g{self.degree}"
         return f"{self.impl}-d{self.depth}"
 
 
@@ -83,11 +110,22 @@ def softplus_residual_table(x_max: float, depth: int) -> cr.SplineTable:
 
 def _kernel_act(name: str, x, cfg: ActivationConfig):
     """One-pallas_call dispatch: the whole epilogue (identity wiring and
-    all) runs inside the kernel — no extra element-wise jnp passes."""
+    all) runs inside the kernel — no extra element-wise jnp passes. The
+    scheme comes from the engine impl; the CR route stays byte-identical
+    to the pre-registry table path."""
     from repro.kernels import epilogue as epi  # lazy: avoid cycle
     from repro.kernels import ops as kernel_ops
-    return kernel_ops.act(x, name,
-                          table=epi.table_for(name, cfg.x_max, cfg.depth))
+    scheme = scheme_of(cfg.impl)
+    if scheme == "cr_spline":
+        return kernel_ops.act(x, name,
+                              table=epi.table_for(name, cfg.x_max, cfg.depth))
+    return kernel_ops.act(x, name, method=scheme, depth=cfg.depth,
+                          x_max=cfg.x_max, degree=cfg.degree)
+
+
+def _approx_spec(cfg: ActivationConfig, act: str) -> approximant.ApproxSpec:
+    return approximant.spec_for(scheme_of(cfg.impl), act, x_max=cfg.x_max,
+                                depth=cfg.depth, degree=cfg.degree)
 
 
 def _tanh_cr(x, cfg: ActivationConfig):
@@ -97,7 +135,18 @@ def _tanh_cr(x, cfg: ActivationConfig):
 
 
 def _tanh_pwl(x, cfg: ActivationConfig):
+    if cfg.use_kernel:
+        return _kernel_act("tanh", x, cfg)
     return cr.interpolate_pwl(tanh_table(cfg.x_max, cfg.depth), x)
+
+
+def _tanh_scheme(x, cfg: ActivationConfig):
+    """Generic approximant backend (poly / rational / future schemes):
+    jnp path evaluates the scheme's own block — the same datapath the
+    kernel runs, in its reference lowering."""
+    if cfg.use_kernel:
+        return _kernel_act("tanh", x, cfg)
+    return approximant.reference(jnp.asarray(x), _approx_spec(cfg, "tanh"))
 
 
 def _make_tanh_cr_fixed(cfg: ActivationConfig):
@@ -168,7 +217,10 @@ def _tanh_base2(x, cfg: ActivationConfig):
 _TANH_BACKENDS: dict[str, Callable] = {
     "exact": lambda x, cfg: jnp.tanh(x),
     "cr": _tanh_cr,
+    "cr_spline": _tanh_cr,
     "pwl": _tanh_pwl,
+    "poly": _tanh_scheme,
+    "rational": _tanh_scheme,
     "region": _tanh_region,
     "taylor": _tanh_taylor,
     "base2": _tanh_base2,
@@ -185,16 +237,26 @@ class ActivationEngine:
 
     def __init__(self, cfg: ActivationConfig | None = None):
         self.cfg = cfg or ActivationConfig()
+        # the registered approximant scheme this engine runs (None for
+        # exact / cr_fixed / region / taylor / base2 backends)
+        self.act_impl = scheme_of(self.cfg.impl)
         if self.cfg.impl == "cr_fixed":
             self._tanh = _make_tanh_cr_fixed(self.cfg)
         else:
-            backend = _TANH_BACKENDS[self.cfg.impl]
+            backend = _TANH_BACKENDS.get(self.cfg.impl)
+            if backend is None and self.act_impl is not None:
+                backend = _tanh_scheme   # any newly registered scheme
+            if backend is None:
+                raise ValueError(
+                    f"unknown activation impl {self.cfg.impl!r}; built-ins: "
+                    f"{sorted(_TANH_BACKENDS)} + 'cr_fixed', registered "
+                    f"approximant schemes: {list(approximant.schemes())}")
             self._tanh = partial(backend, cfg=self.cfg)
 
     @property
     def _kernelized(self) -> bool:
         """True when every nonlinearity lowers to ONE epilogue kernel."""
-        return self.cfg.impl == "cr" and self.cfg.use_kernel
+        return self.act_impl is not None and self.cfg.use_kernel
 
     # -- primitives ---------------------------------------------------
     def tanh(self, x):
@@ -227,6 +289,13 @@ class ActivationEngine:
             return jax.nn.softplus(x)
         if self._kernelized:
             return _kernel_act("softplus", x, self.cfg)
+        if self.act_impl not in (None, "cr_spline"):
+            # scheme-consistent residual (the rational scheme rejects the
+            # non-tanh target with a clear error at build time)
+            spec = _approx_spec(self.cfg, "softplus")
+            h = approximant.reference(jnp.abs(jnp.asarray(x)), spec,
+                                      "softplus_res")
+            return jax.nn.relu(x) + h
         tab = softplus_residual_table(max(self.cfg.x_max, 8.0),
                                       max(self.cfg.depth, 64))
         h = cr.interpolate(tab, jnp.abs(x), odd=False)

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import approximant
 from . import catmull_rom as cr
 from .fixed_point import Q2_13, QFormat, dequantize, quantize, representable_grid
 
@@ -65,30 +66,61 @@ def _quantized_table(x_max: float, depth: int, fmt: QFormat) -> cr.SplineTable:
 
 
 def tanh_error(method: str, depth: int, x_max: float = 4.0,
-               datapath: str = "qlut", fmt: QFormat = Q2_13) -> ErrorStats:
-    """Error of ``method`` in {'cr','pwl'} at ``depth`` over the full
-    Q-format grid, for the given datapath in {'float','qlut','fixed'}."""
+               datapath: str = "qlut", fmt: QFormat = Q2_13,
+               degree: int = 3) -> ErrorStats:
+    """Error of ``method`` at ``depth`` over the full Q-format grid, for
+    the given datapath in {'float','qlut','qout','fixed'}.
+
+    ``method`` is 'cr'/'pwl' (the paper's Table I/II pair, evaluated on
+    the original float64-table codepath so the published numbers stay
+    reproducible bit-for-bit) or any registered approximant scheme —
+    'cr_spline' aliases 'cr'; 'poly'/'rational' take ``degree``. For
+    registered schemes the qlut datapath quantizes the scheme's params
+    to the Q format; qout additionally rounds the output, modeling an
+    end-to-end fixed-point unit the way the paper's tables do.
+    """
     grid = representable_grid(fmt)          # float64 [65536]
     exact = np.tanh(grid)
     x = jnp.asarray(grid, jnp.float64) if jax.config.jax_enable_x64 else jnp.asarray(grid, jnp.float32)
+    if method == "cr_spline":
+        method = "cr"
 
     if datapath == "fixed":
         if method != "cr":
-            raise ValueError("fixed datapath implemented for cr only")
+            raise ValueError(
+                f"datapath='fixed' is the bit-accurate Fig. 3 CR circuit "
+                f"emulation (core/catmull_rom.py::interpolate_fixed); it is "
+                f"not implemented for scheme {method!r} — use datapath="
+                f"'qout' for an end-to-end quantized model of that scheme")
         ftab = cr.build_fixed_table(np.tanh, x_max, depth, fmt)
         xq = quantize(x, fmt)
         y = np.asarray(dequantize(cr.interpolate_fixed(ftab, xq), fmt))
         return _stats(y, exact)
 
-    if datapath == "float":
-        tab = cr.build_table(np.tanh, x_max, depth)
-    elif datapath in ("qlut", "qout"):
-        tab = _quantized_table(x_max, depth, fmt)
-    else:
+    if datapath not in ("float", "qlut", "qout"):
         raise ValueError(f"unknown datapath {datapath!r}")
 
-    fn = cr.interpolate if method == "cr" else cr.interpolate_pwl
-    y = np.asarray(fn(tab, x))
+    if method in ("cr", "pwl"):
+        if datapath == "float":
+            tab = cr.build_table(np.tanh, x_max, depth)
+        else:
+            tab = _quantized_table(x_max, depth, fmt)
+        fn = cr.interpolate if method == "cr" else cr.interpolate_pwl
+        y = np.asarray(fn(tab, x))
+    else:
+        spec = approximant.spec_for(method, "tanh", x_max=x_max,
+                                    depth=depth, degree=degree)
+        params = approximant.params_for(spec, "tanh")
+        if datapath in ("qlut", "qout"):
+            # coefficient ROM with 6 guard bits below the datapath LSB —
+            # standard practice for MAC-chain schemes (poly/rational),
+            # where raw-format coefficient rounding would be amplified
+            # by u = x^2 powers far above the output LSB
+            cfmt = QFormat(fmt.int_bits, fmt.frac_bits + 6)
+            params = np.asarray(
+                dequantize(quantize(params.astype(np.float64), cfmt), cfmt))
+        y = np.asarray(approximant.block(jnp.asarray(x, jnp.float32),
+                                         jnp.asarray(params), spec))
     if datapath == "qout":
         y = np.asarray(dequantize(quantize(y, fmt), fmt))
     return _stats(y, exact)

@@ -104,17 +104,98 @@ def cr_spline_datapath(frac_bits: int = 13, depth: int = 32,
 
 
 def pwl_datapath(frac_bits: int = 13, depth: int = 32) -> AreaReport:
-    """PWL interpolator: value LUT + slope mult + add (for Table III context)."""
+    """PWL interpolator matching the registered ``pwl`` approximant's
+    datapath (core/approximant.py::PWL): a [depth, 2] value+delta LUT
+    (both columns counted — the delta column is what spares a runtime
+    subtractor), one slope multiplier, one adder."""
     n = frac_bits
     b = {
         "abs+sign": adder(n) + mux(n),
-        "lut_values": const_lut(depth + 1, n),
+        "lut_value_delta": const_lut(depth, 2 * n),
         "slope_mult": multiplier(n, n),
         "add": adder(n),
         "saturation": adder(n) + mux(n),
     }
     return AreaReport(name=f"PWL (depth={depth}, {n}b)", gates=sum(b.values()),
                       memory_kbits=0.0, breakdown=b)
+
+
+def poly_datapath(frac_bits: int = 13, depth: int = 8,
+                  degree: int = 3) -> AreaReport:
+    """Piecewise-polynomial (DCTIF-style) unit: a [depth, degree+1]
+    coefficient LUT feeding ``degree`` Horner stages. Each stage is one
+    truncated (n x t_bits) multiplier plus an adder; the coefficient ROM
+    carries 6 guard bits below the datapath LSB (matching the
+    error-analysis model), which is what synthesis sees."""
+    import math
+    n = frac_bits
+    coeff_bits = n + 6
+    t_bits = max(2 + frac_bits - int(math.log2(depth)), 1)
+    b = {
+        "abs+sign": adder(n) + mux(n),
+        "lut_coeffs": const_lut(depth, (degree + 1) * coeff_bits),
+        "horner_mults": degree * TRUNC_MULT * multiplier(coeff_bits, t_bits),
+        "horner_adds": degree * adder(coeff_bits),
+        "saturation": adder(n) + mux(n),
+    }
+    return AreaReport(
+        name=f"poly (depth={depth}, deg={degree}, {n}b)",
+        gates=sum(b.values()), memory_kbits=0.0, breakdown=b)
+
+
+def rational_datapath(frac_bits: int = 13, degree: int = 5,
+                      newton_iters: int | None = None) -> AreaReport:
+    """Padé + Newton-reciprocal unit (no divider, no LUT beyond the
+    wired coefficient constants): u = x^2, two Horner chains in u for
+    num/den, one linear-seed MAC, then ``newton_iters`` iterations of
+    r <- r(2 - d r) at two multipliers + one subtractor each, and the
+    final num * r multiplier. Coefficients are wired constants
+    (synthesis folds them into the multipliers; counted as full
+    multipliers here, i.e. conservatively). ``newton_iters`` defaults to
+    the iteration count the emulated datapath actually runs
+    (approximant.NEWTON_ITERS), so area and benchmark stay in lockstep."""
+    from .approximant import NEWTON_ITERS, PadeRational
+    if newton_iters is None:
+        newton_iters = NEWTON_ITERS
+    order = PadeRational._order(degree)   # same rounding as the datapath
+    n = frac_bits
+    coeff_bits = n + 6
+    k = order // 2            # Horner stages per chain in u
+    b = {
+        "abs+sign": adder(n) + mux(n),
+        "u_square": TRUNC_MULT * multiplier(n, n),
+        "horner_num": k * (TRUNC_MULT * multiplier(coeff_bits, n)
+                           + adder(coeff_bits)),
+        "horner_den": k * (TRUNC_MULT * multiplier(coeff_bits, n)
+                           + adder(coeff_bits)),
+        "newton_seed": TRUNC_MULT * multiplier(coeff_bits, n) + adder(coeff_bits),
+        "newton_iters": newton_iters * (2 * TRUNC_MULT * multiplier(n + 2, n + 2)
+                                        + adder(n + 2)),
+        "final_mult": TRUNC_MULT * multiplier(n + 1, n + 2),
+        "saturation": adder(n) + mux(n),
+    }
+    return AreaReport(
+        name=f"rational (order={order}, {n}b, {newton_iters} Newton)",
+        gates=sum(b.values()), memory_kbits=0.0, breakdown=b)
+
+
+def approximant_datapath(spec) -> AreaReport:
+    """Area model for any registered approximant spec (the DSE hook):
+    dispatches on ``spec.scheme`` with the spec's own geometry and
+    fixed-point format."""
+    if spec.scheme == "cr_spline":
+        import math
+        return cr_spline_datapath(spec.frac_bits, spec.depth,
+                                  x_int_bits=max(
+                                      int(math.ceil(math.log2(spec.x_max))), 1))
+    if spec.scheme == "pwl":
+        return pwl_datapath(spec.frac_bits, spec.depth)
+    if spec.scheme == "poly":
+        return poly_datapath(spec.frac_bits, spec.depth, spec.degree)
+    if spec.scheme == "rational":
+        return rational_datapath(spec.frac_bits, spec.degree)
+    raise ValueError(f"no gate-count model for scheme {spec.scheme!r}; "
+                     "add one to core/gatecount.py::approximant_datapath")
 
 
 # Published Table III rows, quoted verbatim (we did not synthesize these).

@@ -1,21 +1,31 @@
-"""The spline-epilogue subsystem: ONE in-kernel CR activation codepath.
+"""The approximant-epilogue subsystem: one in-kernel activation codepath
+per registered scheme, dispatched on ``ApproxSpec.scheme``.
 
 The paper's thesis is that a single small Catmull-Rom tanh unit serves
 every nonlinearity in an accelerator — sigmoid, SiLU and GELU derive
 from it by identities, softplus from a second tiny residual table. This
-module is that unit for Pallas TPU kernels. It owns:
+module is that unit for Pallas TPU kernels, generalized over the
+Approximant API (``core/approximant.py``): the same epilogue wiring and
+kernel builders run any registered scheme (cr_spline / pwl / poly /
+rational), with the scheme's flat f32 params as a generic VMEM operand.
+It owns:
 
-  * ``TableSpec`` — the static (hashable) geometry of a spline LUT, so
-    kernels can close over depth/period/saturation while the [depth, 4]
-    window array rides along as a normal VMEM operand;
-  * ``cr_spline_block`` — the Fig. 2/3 datapath on a 2D f32 block
-    (index/t split, 4-tap basis MAC, saturation, optional odd-symmetry
-    sign fixup) with both LUT-lookup strategies (onehot-MXU / take);
+  * ``TableSpec`` — now an alias of ``approximant.ApproxSpec``, the
+    hashable static geometry (scheme, depth/degree, domain, symmetry,
+    fixed-point format) kernels close over while the params array rides
+    along as a normal VMEM operand;
+  * ``_cr_tanh_block`` — the paper's Fig. 2/3 datapath on a 2D f32
+    block (index/t split, 4-tap basis MAC, saturation, optional
+    odd-symmetry sign fixup) with both LUT-lookup strategies
+    (onehot-MXU / take). This is the single authoritative CR block —
+    the approximant registry's ``cr_spline`` scheme delegates here;
+    non-CR blocks live with their schemes in ``core/approximant.py``;
   * the composable epilogues ``tanh | sigmoid | silu | gelu_tanh |
-    softplus``, each a pure f32->f32 block function built on the CR
-    block (``make_epilogue``), plus ``table_for`` mapping each epilogue
-    to the table it reads (the tanh table for the first four, the even
-    softplus residual table for the last);
+    softplus``, each a pure f32->f32 block function built on the
+    spec's scheme block (``make_epilogue``), plus ``table_for`` /
+    ``params_for`` mapping each epilogue to what it reads (the tanh
+    approximant for the first four, the even softplus residual for the
+    last);
   * the two kernel builders every public op instantiates:
       - ``elementwise_2d``: matmul-free epilogue — grid over (rows,
         cols) blocks, epilogue applied straight to the input block
@@ -29,20 +39,23 @@ Downstream, ``ops.py`` wraps these with padding/jit, the
 here as a SINGLE ``pallas_call``, and ``models/layers.apply_mlp`` routes
 whole GLU FFNs through ``glu_2d`` under ``ModelConfig.fuse_mlp``. Every
 future variant (bf16 tables, fixed-point datapath, attention epilogues)
-is a local edit to this file.
+is a local edit to this file or a new ``@register`` scheme in
+``core/approximant.py``.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import approximant
 from repro.core import catmull_rom as cr
+from repro.core.approximant import ApproxSpec
 
 SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
 
@@ -52,29 +65,10 @@ LOOKUPS = ("onehot", "take")
 DEFAULT_BLOCK_ROWS = 32
 DEFAULT_BLOCK_COLS = 512
 
-
-@dataclasses.dataclass(frozen=True)
-class TableSpec:
-    """Static geometry of a spline LUT (everything but the window values).
-
-    Hashable, so it can be a static argument of jitted wrappers and be
-    closed over by kernel bodies; the [depth, 4] float windows are passed
-    separately as an array operand (whole table resident in VMEM).
-    """
-
-    period: float
-    depth: int
-    x_max: float
-    saturation: float
-
-    @property
-    def inv_period(self) -> float:
-        return 1.0 / self.period
-
-    @classmethod
-    def of(cls, table: cr.SplineTable) -> "TableSpec":
-        return cls(period=table.period, depth=table.depth,
-                   x_max=table.x_max, saturation=table.saturation)
+# Back-compat: the spline LUT spec is the cr_spline instance of the
+# generic ApproxSpec (same fields, same ``of``; extra scheme/degree/
+# symmetry/format fields default to the paper's flagship CR geometry).
+TableSpec = ApproxSpec
 
 
 def table_for(act: str, x_max: float, depth: int) -> cr.SplineTable:
@@ -89,6 +83,29 @@ def table_for(act: str, x_max: float, depth: int) -> cr.SplineTable:
     if act in EPILOGUES:
         return tanh_table(x_max, depth)
     raise ValueError(f"unknown epilogue {act!r}")
+
+
+def _spec_for_epilogue(act: str, scheme: str, x_max: float, depth: int,
+                       degree: int = 3) -> ApproxSpec:
+    """The spec an epilogue runs under (private: the public per-scheme
+    entry point is ``approximant.spec_for(scheme, act, ...)`` — this
+    internal helper exists for the CR table route and deliberately is
+    not a same-name twin with swapped arguments). The cr_spline route
+    goes through ``table_for`` (cached SplineTables -> bit-identical CR
+    specs); other schemes resolve through the approximant registry,
+    with the same softplus widening everywhere."""
+    if scheme == "cr_spline":
+        return TableSpec.of(table_for(act, x_max, depth))
+    return approximant.spec_for(scheme, act, x_max=x_max, depth=depth,
+                                degree=degree)
+
+
+def params_for(act: str, spec: ApproxSpec) -> np.ndarray:
+    """The flat f32 params array an epilogue reads under ``spec`` (the
+    scheme-generic analogue of ``table_for(...).windows``). Every scheme
+    — cr_spline included — builds from the spec's own geometry and
+    saturation, so a caller-supplied spec is honored in full."""
+    return approximant.params_for(spec, approximant.target_of(act))
 
 
 def _basis_weights_f32(t):
@@ -150,17 +167,31 @@ def _cr_tanh_block(v, win, *, spec: TableSpec, lookup: str = "onehot",
     return y
 
 
-def make_epilogue(act: str, spec: TableSpec, lookup: str = "onehot"):
-    """Build the f32-block epilogue ``fn(v, win) -> y`` for ``act``.
+def _block_for(spec: ApproxSpec, lookup: str):
+    """The scheme's array datapath ``fn(v, params, odd=...)``. cr_spline
+    binds ``_cr_tanh_block`` directly (bit-identical to the pre-registry
+    subsystem); other schemes dispatch through the approximant registry
+    — all of them pure element-wise f32 math, legal inside kernels."""
+    if spec.scheme == "cr_spline":
+        return functools.partial(_cr_tanh_block, spec=spec, lookup=lookup)
 
-    All tanh-derived epilogues reuse ONE CR-tanh evaluation per element —
-    the identities below are the paper's wire-level derivations:
+    def blk(v, params, odd: bool = True):
+        return approximant.block(v, params, spec, lookup=lookup, odd=odd)
+    return blk
+
+
+def make_epilogue(act: str, spec: TableSpec, lookup: str = "onehot"):
+    """Build the f32-block epilogue ``fn(v, params) -> y`` for ``act``.
+
+    All tanh-derived epilogues reuse ONE approximant evaluation per
+    element — the identities below are the paper's wire-level
+    derivations, and they hold for every registered scheme:
         sigmoid(x) = (1 + tanh(x/2)) / 2        (x/2 is a wire shift)
         silu(x)    = x * sigmoid(x)             (one extra multiplier)
         gelu_tanh  = x/2 * (1 + tanh(c(x + 0.044715 x^3)))
         softplus   = relu(x) + h(|x|)           (own even residual table)
     """
-    block = functools.partial(_cr_tanh_block, spec=spec, lookup=lookup)
+    block = _block_for(spec, lookup)
     if act == "tanh":
         return lambda v, win: block(v, win)
     if act == "sigmoid":
@@ -190,20 +221,27 @@ def _elementwise_kernel(x_ref, win_ref, o_ref, *, act: str, spec: TableSpec,
     o_ref[...] = y.astype(o_ref.dtype)
 
 
-def elementwise_2d(x, windows, *, spec: TableSpec, act: str = "tanh",
+def _check_params(params, spec: ApproxSpec):
+    expected = approximant.get(spec.scheme).params_shape(spec)
+    assert tuple(params.shape) == tuple(expected), (params.shape, spec)
+
+
+def elementwise_2d(x, params, *, spec: TableSpec, act: str = "tanh",
                    lookup: str = "onehot",
                    block_rows: int = DEFAULT_BLOCK_ROWS,
                    block_cols: int = DEFAULT_BLOCK_COLS,
                    interpret: bool = False):
-    """Apply one spline epilogue to a 2D array in a single pallas_call.
+    """Apply one approximant epilogue to a 2D array in a single
+    pallas_call.
 
     Grid: 2D blocks over (rows, cols); block_cols a multiple of 128
     (lane width), block_rows a multiple of 8 (sublane). Dims must divide
     by the block shape — ``ops.act`` handles padding/reshaping.
+    ``params`` is the scheme's flat f32 array (CR windows, PWL segment
+    pairs, poly coefficients, Padé rows), whole-array resident in VMEM.
     """
     rows, cols = x.shape
-    depth = windows.shape[0]
-    assert depth == spec.depth, (depth, spec)
+    _check_params(params, spec)
     assert rows % block_rows == 0 and cols % block_cols == 0, (x.shape,)
     grid = (rows // block_rows, cols // block_cols)
     kernel = functools.partial(_elementwise_kernel, act=act, spec=spec,
@@ -213,12 +251,12 @@ def elementwise_2d(x, windows, *, spec: TableSpec, act: str = "tanh",
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
-            pl.BlockSpec((depth, 4), lambda i, j: (0, 0)),  # whole LUT in VMEM
+            pl.BlockSpec(params.shape, lambda i, j: (0, 0)),  # whole LUT in VMEM
         ],
         out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
-    )(x, windows)
+    )(x, params)
 
 
 # ---------------------------------------------------------------------------
@@ -248,7 +286,7 @@ def _glu_kernel(x_ref, wg_ref, wu_ref, win_ref, o_ref, gate_acc, up_acc, *,
         o_ref[...] = y.astype(o_ref.dtype)
 
 
-def glu_2d(x, w_gate, w_up, windows, *, spec: TableSpec, act: str = "silu",
+def glu_2d(x, w_gate, w_up, params, *, spec: TableSpec, act: str = "silu",
            lookup: str = "onehot",
            block_m: int = 128, block_n: int = 128, block_k: int = 512,
            interpret: bool = False):
@@ -267,8 +305,7 @@ def glu_2d(x, w_gate, w_up, windows, *, spec: TableSpec, act: str = "silu",
     assert k == k2 and w_up.shape == (k, n)
     assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
         x.shape, w_gate.shape)
-    depth = windows.shape[0]
-    assert depth == spec.depth, (depth, spec)
+    _check_params(params, spec)
     n_k = k // block_k
     kernel = functools.partial(_glu_kernel, n_k=n_k, act=act, spec=spec,
                                lookup=lookup)
@@ -279,7 +316,7 @@ def glu_2d(x, w_gate, w_up, windows, *, spec: TableSpec, act: str = "silu",
             pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
             pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
             pl.BlockSpec((block_k, block_n), lambda i, j, s: (s, j)),
-            pl.BlockSpec((depth, 4), lambda i, j, s: (0, 0)),
+            pl.BlockSpec(params.shape, lambda i, j, s: (0, 0)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
@@ -288,4 +325,4 @@ def glu_2d(x, w_gate, w_up, windows, *, spec: TableSpec, act: str = "silu",
             pltpu.VMEM((block_m, block_n), jnp.float32),
         ],
         interpret=interpret,
-    )(x, w_gate, w_up, windows)
+    )(x, w_gate, w_up, params)

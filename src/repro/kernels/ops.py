@@ -1,19 +1,22 @@
 """jit'd public wrappers around the Pallas epilogue kernels.
 
 Handles: arbitrary leading dims (flattened to rows), padding to block
-multiples, dtype pass-through, table selection per epilogue, and
-interpret-mode selection (CPU backend executes kernels in interpret
-mode; TPU compiles them).
+multiples, dtype pass-through, approximant-scheme selection per
+epilogue, and interpret-mode selection (CPU backend executes kernels in
+interpret mode; TPU compiles them).
 
 Public surface:
-  act(x, name)        one-pallas_call element-wise epilogue (any of
-                      ``epilogue.EPILOGUES``) — what the ActivationEngine
-                      dispatches to under ``use_kernel=True``
-  cr_act(x)           the ``tanh`` instance (back-compat name)
-  fused_glu(x, wg, wu) GLU matmuls fused with any epilogue
+  act(x, name, method=...)  one-pallas_call element-wise epilogue (any
+                      of ``epilogue.EPILOGUES``) under any registered
+                      approximant scheme — what the ActivationEngine
+                      dispatches to under ``use_kernel=True``. The
+                      default ``method`` is the paper's CR spline.
+  cr_act(x)           the CR ``tanh`` instance (back-compat name)
+  fused_glu(x, wg, wu, method=...) GLU matmuls fused with any epilogue
+                      under any scheme
 
 Autodiff: Pallas forward kernels are wrapped in ``jax.custom_vjp`` whose
-backward recomputes the same math as pure jnp (the epilogues are plain
+backward recomputes the same math as pure jnp (scheme blocks are plain
 traceable functions — one codepath, two lowerings). This is the flash-
 attention trade: no residuals from inside the kernel, a cheap recompute
 in the backward pass — which is what makes ``fuse_mlp`` trainable.
@@ -42,10 +45,30 @@ def _pad_to(v: int, m: int) -> int:
     return (v + m - 1) // m * m
 
 
-def _resolve_table(table: cr.SplineTable | None, act: str) -> cr.SplineTable:
-    """Default table for an epilogue: the paper's flagship geometry
-    (x_max=4, depth=32; softplus widens per ``epilogue.table_for``)."""
-    return table or epi.table_for(act, 4.0, 32)
+def _resolve_spec_params(act: str, table: cr.SplineTable | None,
+                         method: str | None, spec, depth: int, degree: int,
+                         x_max: float):
+    """(spec, params) for one epilogue call. The CR route (explicit
+    table, ``method`` unset or a CR alias) is byte-identical to the
+    pre-registry subsystem: spec from the SplineTable, params = its
+    [depth, 4] windows. Other schemes resolve through the approximant
+    registry."""
+    if spec is not None:
+        if table is not None or method is not None:
+            raise ValueError(
+                "spec= fully determines the approximant; don't also pass "
+                f"table/method (got method={method!r})")
+        return spec, jnp.asarray(epi.params_for(act, spec), jnp.float32)
+    if method in (None, "cr", "cr_spline"):
+        table = table or epi.table_for(act, x_max, depth)
+        return (epi.TableSpec.of(table),
+                jnp.asarray(table.windows, jnp.float32))
+    if table is not None:
+        raise ValueError(
+            f"pass either a SplineTable (CR route) or method={method!r}, "
+            "not both")
+    spec = epi._spec_for_epilogue(act, method, x_max, depth, degree)
+    return spec, jnp.asarray(epi.params_for(act, spec), jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -102,20 +125,25 @@ _act_core.defvjp(_act_core_fwd, _act_core_bwd)
 
 
 def act(x, name: str = "tanh", table: cr.SplineTable | None = None, *,
+        method: str | None = None, spec: epi.ApproxSpec | None = None,
+        depth: int = 32, degree: int = 3, x_max: float = 4.0,
         lookup: str = "onehot", interpret: bool | None = None,
         block_rows: int = epi.DEFAULT_BLOCK_ROWS,
         block_cols: int = epi.DEFAULT_BLOCK_COLS):
-    """Any spline epilogue as a SINGLE Pallas kernel launch.
+    """Any approximant epilogue as a SINGLE Pallas kernel launch.
 
-    ``table`` defaults to the epilogue's own default (the paper's
-    flagship tanh table; the widened softplus residual table)."""
-    table = _resolve_table(table, name)
+    Scheme selection, most specific wins: ``spec`` (a full ApproxSpec),
+    a CR ``table`` (back-compat route, byte-identical to the pre-
+    registry kernels), or ``method`` (a registered scheme name, with
+    ``depth``/``degree``/``x_max`` as its geometry). The default is the
+    paper's flagship CR table (x_max=4, depth=32; softplus widens per
+    ``epilogue.table_for``)."""
+    spec, params = _resolve_spec_params(name, table, method, spec, depth,
+                                        degree, x_max)
     if interpret is None:
         interpret = _interpret_default()
-    windows = jnp.asarray(table.windows, jnp.float32)
-    static = (epi.TableSpec.of(table), name, lookup, interpret,
-              block_rows, block_cols)
-    return _act_core(static, x, windows)
+    static = (spec, name, lookup, interpret, block_rows, block_cols)
+    return _act_core(static, x, params)
 
 
 def cr_act(x, table: cr.SplineTable | None = None, *, lookup: str = "onehot",
@@ -193,14 +221,16 @@ _fused_glu_core.defvjp(_fused_glu_core_fwd, _fused_glu_core_bwd)
 
 
 def fused_glu(x, w_gate, w_up, table: cr.SplineTable | None = None, *,
-              act: str = "silu", lookup: str = "onehot",
-              interpret: bool | None = None,
+              act: str = "silu", method: str | None = None,
+              spec: epi.ApproxSpec | None = None,
+              depth: int = 32, degree: int = 3, x_max: float = 4.0,
+              lookup: str = "onehot", interpret: bool | None = None,
               block_m: int = 128, block_n: int = 128, block_k: int = 512):
-    """epilogue(x @ w_gate) * (x @ w_up) in one fused Pallas kernel."""
-    table = _resolve_table(table, act)
+    """epilogue(x @ w_gate) * (x @ w_up) in one fused Pallas kernel,
+    under any registered approximant scheme (selection as in ``act``)."""
+    spec, params = _resolve_spec_params(act, table, method, spec, depth,
+                                        degree, x_max)
     if interpret is None:
         interpret = _interpret_default()
-    windows = jnp.asarray(table.windows, jnp.float32)
-    static = (epi.TableSpec.of(table), act, lookup, interpret,
-              block_m, block_n, block_k)
-    return _fused_glu_core(static, x, w_gate, w_up, windows)
+    static = (spec, act, lookup, interpret, block_m, block_n, block_k)
+    return _fused_glu_core(static, x, w_gate, w_up, params)

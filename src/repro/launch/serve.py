@@ -179,6 +179,12 @@ def main(argv=None):
     p.add_argument("--gen", type=int, default=32)
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--activation", default=None)
+    p.add_argument("--act-impl", default=None,
+                   help="approximant scheme override (cr_spline|pwl|poly|"
+                        "rational|...) for the serving engine")
+    p.add_argument("--act-impl-kernel", action="store_true",
+                   help="with --act-impl: use_kernel=True (one pallas_call "
+                        "per nonlinearity)")
     p.add_argument("--model-parallel", type=int, default=1)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--backend", choices=("engine", "python"),
@@ -197,13 +203,22 @@ def main(argv=None):
         cfg = dataclasses.replace(
             cfg, activation=dataclasses.replace(cfg.activation,
                                                 impl=args.activation))
+    if args.act_impl_kernel and not args.act_impl:
+        raise SystemExit("--act-impl-kernel requires --act-impl <scheme>")
+    if args.act_impl:
+        from repro.configs.common import act_impl_of
+        cfg = act_impl_of(cfg, args.act_impl,
+                          use_kernel=True if args.act_impl_kernel else None)
     mesh = make_host_mesh(1, args.model_parallel)
     if args.model_parallel > 1 and dict(mesh.shape).get("model", 1) < 2:
         raise SystemExit(
             f"--model-parallel {args.model_parallel} needs that many "
             f"devices; found {len(jax.devices())} (force host devices via "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=N)")
-    print(f"[serve] arch={cfg.name} act={cfg.activation.tag()} "
+    act_tag = cfg.activation.tag()
+    if cfg.act_impl:
+        act_tag += f" (act_impl={cfg.act_impl})"
+    print(f"[serve] arch={cfg.name} act={act_tag} "
           f"backend={args.backend} mesh={dict(mesh.shape)}")
 
     with part.axis_rules(mesh):

@@ -47,19 +47,32 @@ def opt_state_axes(params_axes):
 
 
 def _make_engine(cfg: ModelConfig) -> ActivationEngine:
-    """Engine for a step function, with the fuse_mlp contract enforced at
-    build time: a config that asks for fusion but can't get it (no GLU,
-    non-epilogue act, non-CR engine) would otherwise silently fall back
-    to the unfused path and report fiction in the dry-run roofline."""
-    engine = ActivationEngine(cfg.activation)
+    """Engine for a step function, with the config contracts enforced at
+    build time.
+
+    ``cfg.act_impl`` (the approximant-scheme override) is resolved here:
+    a bogus scheme fails the whole step build with the registered-scheme
+    list instead of surfacing as a trace-time KeyError mid-run. The
+    fuse_mlp contract likewise: a config that asks for fusion but can't
+    get it (no GLU, non-epilogue act, non-approximant engine) would
+    otherwise silently fall back to the unfused path and report fiction
+    in the dry-run roofline."""
+    acfg = cfg.activation
+    if cfg.act_impl:
+        acfg = dataclasses.replace(acfg, impl=cfg.act_impl)
+    try:
+        engine = ActivationEngine(acfg)
+    except ValueError as e:
+        raise ValueError(f"{cfg.name}: invalid activation config "
+                         f"(act_impl={cfg.act_impl!r}): {e}") from e
     if cfg.fuse_mlp:
         from repro.models.layers import mlp_fusable
         if not mlp_fusable(cfg, engine):
             raise ValueError(
                 f"{cfg.name}: fuse_mlp=True requires glu=True, mlp_act in "
-                f"kernels.epilogue.EPILOGUES and a CR activation engine "
-                f"(got glu={cfg.glu}, mlp_act={cfg.mlp_act!r}, "
-                f"impl={cfg.activation.impl!r})")
+                f"kernels.epilogue.EPILOGUES and an approximant-scheme "
+                f"activation engine (got glu={cfg.glu}, "
+                f"mlp_act={cfg.mlp_act!r}, impl={acfg.impl!r})")
     return engine
 
 

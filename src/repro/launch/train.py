@@ -21,7 +21,6 @@ import time
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.data import DataConfig, SyntheticPipeline
@@ -46,6 +45,14 @@ def build_parser():
     p.add_argument("--warmup", type=int, default=20)
     p.add_argument("--activation", default=None,
                    help="override activation impl: exact|cr|cr_fixed|pwl|...")
+    p.add_argument("--act-impl", default=None,
+                   help="approximant scheme override (cr_spline|pwl|poly|"
+                        "rational|...) — validated at step build; "
+                        "--act-impl-kernel routes it through the Pallas "
+                        "epilogue kernels")
+    p.add_argument("--act-impl-kernel", action="store_true",
+                   help="with --act-impl: use_kernel=True (one pallas_call "
+                        "per nonlinearity)")
     p.add_argument("--remat", default="none", choices=["none", "block", "dots"])
     p.add_argument("--grad-compression", action="store_true")
     p.add_argument("--data-parallel", type=int, default=0,
@@ -67,6 +74,12 @@ def main(argv=None):
         cfg = dataclasses.replace(
             cfg, activation=dataclasses.replace(cfg.activation,
                                                 impl=args.activation))
+    if args.act_impl_kernel and not args.act_impl:
+        raise SystemExit("--act-impl-kernel requires --act-impl <scheme>")
+    if args.act_impl:
+        from repro.configs.common import act_impl_of
+        cfg = act_impl_of(cfg, args.act_impl,
+                          use_kernel=True if args.act_impl_kernel else None)
     n_dev = len(jax.devices())
     dp = args.data_parallel or max(1, n_dev // args.model_parallel)
     mesh = make_host_mesh(dp, args.model_parallel)

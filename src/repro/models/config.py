@@ -76,6 +76,14 @@ class ModelConfig:
 
     # activation engine (the paper's technique)
     activation: ActivationConfig = dataclasses.field(default_factory=ActivationConfig)
+    act_impl: str = ""              # approximant scheme override: when set
+                                    # ("cr_spline"|"pwl"|"poly"|"rational"|
+                                    # any registered scheme, or an engine
+                                    # impl like "exact"/"cr_fixed"), the
+                                    # step builders run the engine with
+                                    # activation.impl replaced by it —
+                                    # validated in launch/steps.py so train
+                                    # AND serve run the scheme end-to-end
 
     # precision
     param_dtype: str = "float32"

@@ -310,25 +310,34 @@ def init_mlp(key, cfg: ModelConfig):
 
 
 def mlp_fusable(cfg: ModelConfig, engine: ActivationEngine) -> bool:
-    """fuse_mlp preconditions: a gated FFN whose activation exists as a
-    spline epilogue, under a CR engine (the fused kernel IS the CR
-    spline — fusing under a different backend would silently change
-    numerics). Checked here and at step-build time (launch/steps.py)."""
+    """fuse_mlp preconditions: a gated FFN whose activation exists as an
+    epilogue, under an approximant-scheme engine (the fused kernel IS
+    that scheme's datapath — fusing under a non-approximant backend
+    would silently change numerics). Checked here and at step-build
+    time (launch/steps.py)."""
     from repro.kernels.epilogue import EPILOGUES  # lazy: avoid cycle
     return (cfg.fuse_mlp and cfg.glu and cfg.mlp_act in EPILOGUES
-            and engine.cfg.impl == "cr")
+            and engine.act_impl is not None)
 
 
 def apply_mlp(params, x, cfg: ModelConfig, engine: ActivationEngine):
     cdt = dtype_of(cfg)
     if mlp_fusable(cfg, engine):
-        # one kernel: gate/up matmuls + spline epilogue on the f32
+        # one kernel: gate/up matmuls + approximant epilogue on the f32
         # accumulator — the gate projection never round-trips to HBM.
         from repro.kernels import epilogue as epi, ops as kernel_ops
-        table = epi.table_for(cfg.mlp_act, engine.cfg.x_max, engine.cfg.depth)
-        h = kernel_ops.fused_glu(x, params["w_gate"].astype(cdt),
-                                 params["w_up"].astype(cdt), table,
-                                 act=cfg.mlp_act)
+        ecfg = engine.cfg
+        if engine.act_impl == "cr_spline":
+            table = epi.table_for(cfg.mlp_act, ecfg.x_max, ecfg.depth)
+            h = kernel_ops.fused_glu(x, params["w_gate"].astype(cdt),
+                                     params["w_up"].astype(cdt), table,
+                                     act=cfg.mlp_act)
+        else:
+            h = kernel_ops.fused_glu(x, params["w_gate"].astype(cdt),
+                                     params["w_up"].astype(cdt),
+                                     act=cfg.mlp_act, method=engine.act_impl,
+                                     depth=ecfg.depth, x_max=ecfg.x_max,
+                                     degree=ecfg.degree)
     else:
         up = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(cdt))
         if cfg.glu:

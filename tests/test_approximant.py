@@ -1,0 +1,301 @@
+"""The Approximant API, registry to serve path.
+
+Four layers of guarantees:
+  * design contract: every registered scheme is odd-symmetric, saturates
+    to a constant (<= 1) beyond the domain, and is monotone
+    non-decreasing over the full Q2.13 input lattice — the properties a
+    hardware tanh unit must keep regardless of approximation family;
+  * kernel parity: ``ops.act(method=scheme)`` (one pallas_call) matches
+    the scheme's own jnp block, and the scheme survives jit + grad via
+    the custom-VJP recompute;
+  * analysis: the fixed datapath is CR-only and says so; the gate model
+    covers every registered scheme;
+  * model/serve: ``ModelConfig.act_impl`` threads a scheme through the
+    step builders, and a full ServeEngine decode runs under
+    ``method='pwl'`` token-identically to its lockstep reference.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import approximant as apx
+from repro.core import gatecount as gc
+from repro.core.activations import ActivationConfig, ActivationEngine, scheme_of
+from repro.core.error_analysis import tanh_error
+from repro.core.fixed_point import representable_grid
+from repro.kernels import ops
+
+# one representative geometry per scheme, straight from the registry so
+# a newly @register-ed scheme is contract-tested automatically
+GEOMETRIES = {s: apx.get(s).default_geometry for s in apx.schemes()}
+
+
+def spec_and_params(scheme, target="tanh"):
+    geom = GEOMETRIES[scheme]
+    spec = apx.spec_for(scheme, target if target != "softplus_res" else
+                        "softplus", x_max=4.0, **geom)
+    return spec, jnp.asarray(apx.params_for(spec, target))
+
+
+def test_registry_covers_the_design_space():
+    assert set(GEOMETRIES) <= set(apx.schemes())
+    assert len(apx.schemes()) >= 4
+    with pytest.raises(ValueError, match="registered"):
+        apx.get("cordic")
+
+
+@pytest.mark.parametrize("scheme", sorted(GEOMETRIES))
+class TestDesignContract:
+    """Properties every registered approximant must keep on the full
+    Q2.13 lattice (the paper's 2^16-point analysis grid)."""
+
+    def _eval(self, scheme):
+        spec, params = spec_and_params(scheme)
+        grid = jnp.asarray(representable_grid(), jnp.float32)
+        return grid, np.asarray(apx.block(grid, params, spec)), spec
+
+    def test_params_shape_contract(self, scheme):
+        spec, params = spec_and_params(scheme)
+        assert tuple(params.shape) == tuple(
+            apx.get(scheme).params_shape(spec))
+        assert params.dtype == jnp.float32 and params.ndim == 2
+
+    def test_odd_symmetric(self, scheme):
+        spec, params = spec_and_params(scheme)
+        x = jnp.asarray(np.linspace(0.0, 6.0, 4001), jnp.float32)
+        yp = np.asarray(apx.block(x, params, spec))
+        yn = np.asarray(apx.block(-x, params, spec))
+        np.testing.assert_array_equal(yn, -yp)
+
+    def test_saturates_beyond_domain(self, scheme):
+        # the Q2.13 grid spans [-4, 4): the positive tail needs its own
+        # beyond-domain points
+        spec, params = spec_and_params(scheme)
+        far = jnp.asarray(np.linspace(spec.x_max, 4 * spec.x_max, 257),
+                          jnp.float32)
+        y_far = np.asarray(apx.block(far, params, spec))
+        np.testing.assert_array_equal(y_far, np.float32(spec.saturation))
+        np.testing.assert_array_equal(np.asarray(apx.block(-far, params,
+                                                           spec)),
+                                      np.float32(-spec.saturation))
+        grid, y, _ = self._eval(scheme)
+        assert np.max(np.abs(y)) <= 1.0 + 1e-6
+        assert abs(spec.saturation) <= 1.0
+
+    def test_monotone_on_q213_grid(self, scheme):
+        grid, y, _ = self._eval(scheme)
+        order = np.argsort(np.asarray(grid))
+        assert np.min(np.diff(y[order])) >= -1e-6, scheme
+
+    def test_approximates_tanh(self, scheme):
+        grid, y, _ = self._eval(scheme)
+        err = np.max(np.abs(y - np.tanh(np.asarray(grid, np.float64))))
+        assert err < 0.03, (scheme, err)   # even rational deg-3 < 0.019
+
+
+def test_monotone_at_every_dse_swept_geometry():
+    """The design contract must hold at EVERY geometry the DSE sweeps,
+    not just the representative one — coarse poly fits regressed here
+    once (free Chebyshev fits had non-monotone boundary jumps)."""
+    from benchmarks.dse import FULL_SWEEP
+    grid = jnp.asarray(representable_grid(), jnp.float32)
+    order = np.argsort(np.asarray(grid))
+    for scheme, geom in FULL_SWEEP:
+        spec = apx.spec_for(scheme, "tanh", depth=geom.get("depth", 32),
+                            degree=geom.get("degree", 3))
+        params = jnp.asarray(apx.params_for(spec, "tanh"))
+        y = np.asarray(apx.block(grid, params, spec))
+        assert np.min(np.diff(y[order])) >= -1e-6, (scheme, geom)
+
+
+@pytest.mark.parametrize("scheme", sorted(GEOMETRIES))
+class TestKernelParity:
+    def test_kernel_matches_block(self, scheme):
+        spec, params = spec_and_params(scheme)
+        x = jnp.asarray(np.random.RandomState(1).uniform(-6, 6, (37, 200)),
+                        jnp.float32)
+        yk = ops.act(x, "tanh", method=scheme, **{**dict(depth=32, degree=3),
+                                                  **GEOMETRIES[scheme]})
+        yr = apx.block(x, params, spec)
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_grad_flows_via_recompute_vjp(self, scheme):
+        geom = {**dict(depth=32, degree=3), **GEOMETRIES[scheme]}
+        x = jnp.asarray(np.random.RandomState(2).uniform(-2, 2, (8, 128)),
+                        jnp.float32)
+        g = jax.grad(lambda v: ops.act(v, "tanh", method=scheme,
+                                       **geom).sum())(x)
+        assert g.shape == x.shape
+        assert bool(jnp.all(jnp.isfinite(g)))
+        # d tanh/dx ~ 1 at 0, so grads must be non-trivial
+        assert float(jnp.max(jnp.abs(g))) > 0.5
+
+
+class TestEngineSchemes:
+    @pytest.mark.parametrize("impl", ["pwl", "poly", "rational"])
+    def test_jnp_and_kernel_paths_agree(self, impl):
+        jcfg = ActivationConfig(impl=impl, depth=32, degree=5)
+        kcfg = dataclasses.replace(jcfg, use_kernel=True)
+        x = jnp.asarray(np.random.RandomState(3).uniform(-5, 5, (16, 256)),
+                        jnp.float32)
+        for fn in ("tanh", "sigmoid", "silu", "gelu_tanh"):
+            yj = getattr(ActivationEngine(jcfg), fn)(x)
+            yk = getattr(ActivationEngine(kcfg), fn)(x)
+            np.testing.assert_allclose(np.asarray(yk), np.asarray(yj),
+                                       rtol=1e-5, atol=1e-5, err_msg=fn)
+
+    def test_scheme_of_mapping(self):
+        assert scheme_of("cr") == "cr_spline"
+        assert scheme_of("pwl") == "pwl"
+        assert scheme_of("exact") is None
+        assert scheme_of("cr_fixed") is None
+
+    def test_unknown_impl_names_registered_schemes(self):
+        with pytest.raises(ValueError, match="rational"):
+            ActivationEngine(ActivationConfig(impl="spline_of_doom"))
+
+    def test_newly_registered_scheme_is_picked_up_by_name(self):
+        # the advertised contract: @register is the ONLY step — the
+        # engine resolves the new scheme without a backend-table edit
+        @apx.register
+        class DoubledPWL(apx.PWL):
+            scheme = "pwl2_test"
+        try:
+            eng = ActivationEngine(ActivationConfig(impl="pwl2_test",
+                                                    depth=16))
+            x = jnp.asarray([0.5, -1.5], jnp.float32)
+            np.testing.assert_allclose(
+                np.asarray(eng.tanh(x)), np.tanh([0.5, -1.5]), atol=5e-3)
+        finally:
+            apx._REGISTRY.pop("pwl2_test")
+
+    def test_rational_softplus_rejected_with_clear_error(self):
+        eng = ActivationEngine(ActivationConfig(impl="rational"))
+        with pytest.raises(ValueError, match="tanh only"):
+            eng.softplus(jnp.ones((4, 8), jnp.float32))
+
+    def test_poly_softplus_uses_scheme_residual(self):
+        eng = ActivationEngine(ActivationConfig(impl="poly", depth=8))
+        x = jnp.asarray(np.linspace(-10, 10, 2001), jnp.float32)
+        y = np.asarray(eng.softplus(x), np.float64)
+        exact = np.log1p(np.exp(-np.abs(np.linspace(-10, 10, 2001)))) \
+            + np.maximum(np.linspace(-10, 10, 2001), 0.0)
+        assert np.max(np.abs(y - exact)) < 5e-3
+
+
+class TestAnalysisSurface:
+    def test_fixed_datapath_is_cr_only_and_says_so(self):
+        for scheme in ("pwl", "poly", "rational"):
+            with pytest.raises(ValueError, match=scheme):
+                tanh_error(scheme, 32, datapath="fixed")
+        # the CR route still works (and cr_spline aliases cr)
+        assert tanh_error("cr_spline", 32, datapath="fixed").max < 5e-4
+
+    @pytest.mark.parametrize("scheme", sorted(GEOMETRIES))
+    def test_error_analysis_evaluates_any_scheme(self, scheme):
+        geom = GEOMETRIES[scheme]
+        s = tanh_error(scheme, geom.get("depth", 32), datapath="qout",
+                       degree=geom.get("degree", 3))
+        assert 0.0 < s.max < 0.03 and 0.0 < s.rms <= s.max
+
+    @pytest.mark.parametrize("scheme", sorted(GEOMETRIES))
+    def test_gatecount_covers_every_scheme(self, scheme):
+        spec, _ = spec_and_params(scheme)
+        rep = gc.approximant_datapath(spec)
+        assert rep.gates > 0 and rep.breakdown
+
+
+class TestModelThreading:
+    def test_act_impl_threads_through_step_builder(self):
+        from repro.configs import registry
+        from repro.launch import steps
+        cfg = dataclasses.replace(registry.get("qwen3-0.6b", smoke=True),
+                                  act_impl="poly")
+        engine = steps.make_engine(cfg)
+        assert engine.act_impl == "poly"
+        assert engine.cfg.impl == "poly"
+
+    def test_bogus_act_impl_fails_at_build_with_scheme_list(self):
+        from repro.configs import registry
+        from repro.launch import steps
+        cfg = dataclasses.replace(registry.get("qwen3-0.6b", smoke=True),
+                                  act_impl="cordic")
+        with pytest.raises(ValueError, match="act_impl='cordic'"):
+            steps.make_engine(cfg)
+
+    def test_act_impl_of_helper(self):
+        from repro.configs import registry
+        from repro.configs.common import act_impl_of
+        cfg = act_impl_of(registry.get("qwen3-0.6b", smoke=True), "rational",
+                          use_kernel=True)
+        assert cfg.act_impl == "rational"
+        assert cfg.activation.use_kernel
+
+    def test_fused_of_respects_act_impl(self):
+        from repro.configs import registry
+        from repro.configs.common import fused_of
+        base = registry.get("qwen3-0.6b", smoke=True)
+        fcfg = fused_of(dataclasses.replace(base, act_impl="pwl"))
+        assert fcfg.fuse_mlp and fcfg.activation.impl == "pwl"
+        # non-approximant override: honestly left unfused
+        ecfg = fused_of(dataclasses.replace(base, act_impl="exact"))
+        assert not ecfg.fuse_mlp
+
+    def test_fused_of_keeps_non_cr_engine_scheme(self):
+        # an engine already running a non-CR scheme must NOT be silently
+        # swapped to the CR spline by fusion
+        from repro.configs import registry
+        from repro.configs.common import fused_of
+        base = registry.get("qwen3-0.6b", smoke=True)
+        pcfg = fused_of(dataclasses.replace(
+            base, activation=ActivationConfig(impl="poly", depth=8)))
+        assert pcfg.fuse_mlp and pcfg.activation.impl == "poly"
+
+
+class TestServeSmoke:
+    def test_pwl_scheme_survives_full_serve_path(self):
+        """A non-CR approximant through the WHOLE serving stack —
+        bucketed ragged prefill, slot insert, in-jit chunked decode —
+        must emit token-for-token what the lockstep reference path
+        produces under the same engine."""
+        from repro.configs import registry
+        from repro.launch import steps
+        from repro.models import model as M
+        from repro.serve import EngineConfig, ServeEngine
+
+        def lockstep_reference(cfg, params, prompt, gen, capacity):
+            eng = steps.make_engine(cfg)
+            logits, cache = M.prefill_fn(
+                params, {"tokens": jnp.asarray(prompt[None, :])}, cfg, eng,
+                capacity=capacity)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out = [int(tok[0])]
+            for _ in range(gen - 1):
+                logits, cache = M.decode_fn(params, {"tokens": tok[:, None]},
+                                            cache, cfg, eng)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                out.append(int(tok[0]))
+            return out
+
+        cfg = dataclasses.replace(
+            registry.get("qwen3-0.6b", smoke=True), act_impl="pwl",
+            activation=ActivationConfig(impl="pwl", depth=32,
+                                        use_kernel=True))
+        params, _ = M.materialize_params(cfg, seed=0)
+        rng = np.random.RandomState(11)
+        prompts = [rng.randint(0, cfg.vocab_size, (n,)).astype(np.int32)
+                   for n in (9, 14)]
+        gen = 6
+        eng = ServeEngine(cfg, params, EngineConfig(
+            slots=2, max_prompt_len=32, max_len=40, chunk=3))
+        for p in prompts:
+            eng.submit(p, max_new=gen)
+        done = eng.run()
+        assert [len(c.tokens) for c in done] == [gen, gen]
+        for c, p in zip(done, prompts):
+            ref = lockstep_reference(cfg, params, p, gen, eng.capacity)
+            assert c.tokens == ref, (c.uid, c.tokens, ref)

@@ -172,11 +172,23 @@ class TestEngineSinglePass:
         np.testing.assert_allclose(np.asarray(yk), np.asarray(yj),
                                    rtol=1e-5, atol=1e-5)
 
-    def test_non_cr_engine_ignores_use_kernel_for_derived_fns(self):
-        # pwl has no epilogue kernel: use_kernel must not reroute it
-        eng = ActivationEngine(ActivationConfig(impl="pwl", use_kernel=True))
+    def test_non_approximant_engine_ignores_use_kernel(self):
+        # taylor/region/base2 have no approximant scheme (and therefore
+        # no epilogue kernel): use_kernel must not reroute them
+        eng = ActivationEngine(ActivationConfig(impl="taylor",
+                                                use_kernel=True))
         x = rand((4, 128), seed=29)
         assert count_pallas_calls(jax.make_jaxpr(eng.sigmoid)(x).jaxpr) == 0
+
+    @pytest.mark.parametrize("impl", ["pwl", "poly", "rational"])
+    def test_non_cr_schemes_kernelize_every_nonlinearity(self, impl):
+        # under the Approximant API every registered scheme lowers each
+        # nonlinearity to exactly ONE pallas_call, like the CR flagship
+        eng = ActivationEngine(ActivationConfig(impl=impl, use_kernel=True))
+        x = rand((4, 128), seed=29)
+        for fn in ("tanh", "sigmoid", "silu", "gelu_tanh"):
+            jaxpr = jax.make_jaxpr(getattr(eng, fn))(x)
+            assert count_pallas_calls(jaxpr.jaxpr) == 1, (impl, fn)
 
 
 # ---------------------------------------------------------------------------
