@@ -3,24 +3,28 @@
 The DSE the related work describes (arXiv:1810.08650, arXiv:2007.11976)
 run against OUR stack: every registered approximant scheme is swept over
 its geometry knobs (LUT depth for cr_spline/pwl, depth x degree for
-poly, continued-fraction order for rational) and each design point is
-scored on the three axes that decide a hardware activation unit:
+poly, continued-fraction order for rational, AND the Q format of the
+integer datapath) and each design point is scored on the three axes
+that decide a hardware activation unit:
 
-  error    max / RMS vs exact tanh over the full Q2.13 input lattice,
-           end-to-end quantized (datapath='qout' — the paper's Tables
-           I/II convention, so the CR rows reproduce the paper);
+  error    max / RMS vs exact tanh over the full Q-format input
+           lattice, measured on the scheme's BIT-ACCURATE fixed
+           datapath (datapath='fixed' — the integer circuit the papers
+           synthesize, not a float stand-in; the CR rows reproduce the
+           paper's Tables I/II);
   area     NAND2-equivalent gates from the analytic model in
-           core/gatecount.py (applied uniformly, so relative
-           comparisons are meaningful);
+           core/gatecount.py at the point's own Q-format widths
+           (applied uniformly, so relative comparisons are meaningful);
   speed    warmed wall-time of the scheme's single-pass Pallas epilogue
            kernel at a fixed shape (interpret mode on CPU — relative
            comparisons between schemes only, like kernel_bench).
 
 The 3-axis Pareto frontier is printed (and emitted under ``--json`` for
-the CI artifact). PASS gate: the flagship CR depth-64 point must land
-at one Q2.13 LSB of max error (paper Table II: 0.000122 = 2^-13), every
-point must have all three axes populated, and the full sweep must cover
->= 12 points across >= 4 schemes.
+the CI artifact). PASS gates: the flagship CR depth-64 Q2.13 point must
+land at one Q2.13 LSB of max FIXED-datapath error (paper Table II:
+0.000122 = 2^-13), every point must have all three axes populated, and
+the full sweep must cover >= 12 points across >= 4 schemes and >= 3
+Q formats.
 
     PYTHONPATH=src python -m benchmarks.dse            # full sweep
     PYTHONPATH=src python -m benchmarks.dse --reduced  # CI smoke
@@ -38,30 +42,42 @@ import numpy as np
 from repro.core import approximant as apx
 from repro.core import gatecount as gc
 from repro.core.error_analysis import tanh_error
+from repro.core.fixed_point import QFormat
 from repro.kernels import ops
 
 from .kernel_bench import _time
 
 LSB = 2.0 ** -13
 
-# (scheme, geometry) design points. cr_spline/pwl sweep the paper's four
-# LUT depths; poly sweeps segments x degree; rational sweeps the odd
-# continued-fraction orders (the monotone branch).
+# (scheme, geometry) design points; geometry may carry ``frac_bits`` to
+# sweep the Q format (default Q2.13). cr_spline/pwl sweep the paper's
+# four LUT depths; poly sweeps segments x degree; rational sweeps the
+# odd continued-fraction orders (the monotone branch); one flagship
+# geometry per scheme is additionally swept across Q2.10/Q2.13/Q2.16.
+Q_SWEEP = (10, 16)            # frac_bits beyond the default 13
+
 FULL_SWEEP = (
     [("cr_spline", dict(depth=d)) for d in (8, 16, 32, 64)]
     + [("pwl", dict(depth=d)) for d in (8, 16, 32, 64)]
     + [("poly", dict(depth=d, degree=g))
        for d, g in ((4, 2), (4, 3), (8, 3), (16, 3))]
     + [("rational", dict(degree=g)) for g in (3, 5, 7)]
+    + [("cr_spline", dict(depth=32, frac_bits=fb)) for fb in Q_SWEEP]
+    + [("pwl", dict(depth=32, frac_bits=fb)) for fb in Q_SWEEP]
+    + [("poly", dict(depth=8, degree=3, frac_bits=fb)) for fb in Q_SWEEP]
+    + [("rational", dict(degree=5, frac_bits=fb)) for fb in Q_SWEEP]
 )
 
 # CI smoke: the PASS-gated CR points + every scheme at its
 # registry-declared representative geometry (a newly registered scheme
-# joins the reduced sweep automatically).
+# joins the reduced sweep automatically) + a narrow and a wide Q-format
+# point so the fixed-datapath Q sweep stays exercised.
 REDUCED_SWEEP = (
     [("cr_spline", dict(depth=d)) for d in (32, 64)]
     + [(s, apx.get(s).default_geometry) for s in apx.schemes()
        if s != "cr_spline"]
+    + [("cr_spline", dict(depth=32, frac_bits=10)),
+       ("pwl", dict(depth=32, frac_bits=16))]
 )
 
 BENCH_SHAPE = (256, 512)
@@ -96,38 +112,50 @@ def run(verbose: bool = True, reduced: bool = False,
     key = jax.random.key(0)
     x = jax.random.normal(key, BENCH_SHAPE, jnp.float32) * 2.0
     rows = []
+    t_cache: dict = {}    # kernel time is Q-format independent (f32 kernel)
     for scheme, geom in sweep:
         depth = geom.get("depth", 32)
         degree = geom.get("degree", 3)
-        spec = apx.spec_for(scheme, "tanh", depth=depth, degree=degree)
-        err = tanh_error(scheme, depth, datapath="qout", degree=degree)
+        frac_bits = geom.get("frac_bits", 13)
+        fmt = QFormat(2, frac_bits)
+        spec = apx.spec_for(scheme, "tanh", depth=depth, degree=degree,
+                            int_bits=fmt.int_bits, frac_bits=frac_bits)
+        err = tanh_error(scheme, depth, datapath="fixed", degree=degree,
+                         fmt=fmt)
         area = gc.approximant_datapath(spec)
-        t_ms = _time_kernel(scheme, geom, x, reps=reps) * 1e3
+        tkey = (scheme, depth, degree)
+        if tkey not in t_cache:
+            t_cache[tkey] = _time_kernel(scheme, geom, x, reps=reps) * 1e3
         rows.append(dict(
-            scheme=scheme, depth=depth, degree=degree,
+            scheme=scheme, depth=depth, degree=degree, qformat=str(fmt),
             params_shape=list(apx.get(scheme).params_shape(spec)),
             rms_err=err.rms, max_err=err.max,
-            gates=round(area.gates), t_kernel_ms=t_ms))
+            gates=round(area.gates), t_kernel_ms=t_cache[tkey]))
 
     pareto = _pareto(rows)
-    pareto_set = {(r["scheme"], r["depth"], r["degree"]) for r in pareto}
+    pareto_set = {(r["scheme"], r["depth"], r["degree"], r["qformat"])
+                  for r in pareto}
 
     checks = []
     n_schemes = len({r["scheme"] for r in rows})
-    if not reduced and (len(rows) < 12 or n_schemes < 4):
+    n_formats = len({r["qformat"] for r in rows})
+    if not reduced and (len(rows) < 12 or n_schemes < 4 or n_formats < 3):
         checks.append(f"sweep too small: {len(rows)} points / "
-                      f"{n_schemes} schemes (need >= 12 / >= 4)")
+                      f"{n_schemes} schemes / {n_formats} Q formats "
+                      f"(need >= 12 / >= 4 / >= 3)")
     for r in rows:
         if not all(np.isfinite([r["rms_err"], r["max_err"], r["gates"],
                                 r["t_kernel_ms"]])) or r["t_kernel_ms"] <= 0:
             checks.append(f"unpopulated axes in {r}")
-    cr64 = [r for r in rows if r["scheme"] == "cr_spline" and r["depth"] == 64]
+    cr64 = [r for r in rows if r["scheme"] == "cr_spline"
+            and r["depth"] == 64 and r["qformat"] == "Q2.13"]
     if not cr64:
         checks.append("flagship cr_spline depth-64 point missing from sweep")
     elif abs(cr64[0]["max_err"] - LSB) > 0.05 * LSB:
         checks.append(
-            f"cr_spline depth-64 max error {cr64[0]['max_err']:.6e} is not "
-            f"one Q2.13 LSB (paper Table II: {LSB:.6e})")
+            f"cr_spline depth-64 fixed-datapath max error "
+            f"{cr64[0]['max_err']:.6e} is not one Q2.13 LSB "
+            f"(paper Table II: {LSB:.6e})")
 
     status = "PASS" if not checks else "FAIL"
     result = {"rows": rows, "pareto": pareto, "checks": checks,
@@ -135,14 +163,16 @@ def run(verbose: bool = True, reduced: bool = False,
 
     if verbose:
         print("\n== Approximant design-space exploration "
-              f"({'reduced' if reduced else 'full'} sweep; Q2.13 qout "
-              "datapath; timings interpret-mode relative) ==")
-        print(f"{'scheme':>10} {'depth':>5} {'deg':>3} | {'RMS err':>9} "
-              f"{'max err':>9} | {'gates':>6} | {'t_kern':>9} | pareto")
+              f"({'reduced' if reduced else 'full'} sweep; bit-accurate "
+              "fixed datapath; timings interpret-mode relative) ==")
+        print(f"{'scheme':>10} {'depth':>5} {'deg':>3} {'qfmt':>6} | "
+              f"{'RMS err':>9} {'max err':>9} | {'gates':>6} | "
+              f"{'t_kern':>9} | pareto")
         for r in rows:
-            on = "*" if (r["scheme"], r["depth"], r["degree"]) in pareto_set \
-                else ""
-            print(f"{r['scheme']:>10} {r['depth']:5d} {r['degree']:3d} | "
+            on = "*" if (r["scheme"], r["depth"], r["degree"],
+                         r["qformat"]) in pareto_set else ""
+            print(f"{r['scheme']:>10} {r['depth']:5d} {r['degree']:3d} "
+                  f"{r['qformat']:>6} | "
                   f"{r['rms_err']:9.6f} {r['max_err']:9.6f} | "
                   f"{r['gates']:6d} | {r['t_kernel_ms']:7.1f}ms | {on:>3}")
         print(f"Pareto frontier (err x gates x time): {len(pareto)} of "

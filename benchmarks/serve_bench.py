@@ -14,6 +14,10 @@ Three measurements on the smoke qwen3 config (CPU; relative numbers):
   * offered-load sweep — queue depths of 1x/2x/4x the slot count with
     variable-length prompts; reports prefill/decode throughput and
     p50/p99 end-to-end request latency (queue wait included) per load.
+    Admission timing covers BOTH dispatches: `prefill_tokens_per_s` is
+    the ragged prefill alone, `admission_tokens_per_s` additionally
+    counts the timed slot insert (`EngineStats.insert_s`) — the number
+    that was silently overstated before the insert was timed.
   * admission sweep — the same 2x/4x workloads served with batched
     (bucket-grouped, one ragged prefill dispatch per admission round)
     vs serial (one request per dispatch — the PR-2 admission
@@ -116,6 +120,8 @@ def _admission_sweep(cfg, params, seed):
                 "prefill_batches": st.prefill_batches,
                 "prefill_requests": st.prefill_requests,
                 "prefill_s": st.prefill_s,
+                "insert_s": st.insert_s,
+                "admission_tokens_per_s": st.admission_tokens_per_s,
                 "p50_queue_s": float(np.percentile(q, 50)),
                 "p99_queue_s": float(np.percentile(q, 99)),
             }
@@ -156,6 +162,8 @@ def run(verbose: bool = True, json_path: str | None = None,
     st, _, _ = _engine_pass(engine, fixed, GEN)
     engine_lockstep = {
         "prefill_tokens_per_s": st.prefill_tokens_per_s,
+        "insert_s": st.insert_s,
+        "admission_tokens_per_s": st.admission_tokens_per_s,
         "decode_tokens_per_s": st.decode_tokens_per_s,
         "decode_s": st.decode_s,
         "decode_chunks": st.decode_chunks,
@@ -172,6 +180,8 @@ def run(verbose: bool = True, json_path: str | None = None,
         loads.append({
             "offered_requests": n,
             "prefill_tokens_per_s": st.prefill_tokens_per_s,
+            "insert_s": st.insert_s,
+            "admission_tokens_per_s": st.admission_tokens_per_s,
             "decode_tokens_per_s": st.decode_tokens_per_s,
             "decode_chunks": st.decode_chunks,
             "p50_latency_s": float(np.percentile(lat, 50)),
@@ -202,6 +212,10 @@ def run(verbose: bool = True, json_path: str | None = None,
               f"decode tok/s")
         print(f"scan engine : {engine_lockstep['decode_tokens_per_s']:8.1f} "
               f"decode tok/s   ({speedup:.2f}x)")
+        print(f"admission   : {engine_lockstep['admission_tokens_per_s']:8.1f} "
+              f"tok/s incl. insert ({engine_lockstep['insert_s']*1e3:.1f} ms "
+              f"insert_s; prefill-only "
+              f"{engine_lockstep['prefill_tokens_per_s']:.1f})")
         for ld in loads:
             print(f"load {ld['offered_requests']:3d} reqs: "
                   f"decode {ld['decode_tokens_per_s']:7.1f} tok/s  "

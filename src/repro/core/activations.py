@@ -45,17 +45,30 @@ import numpy as np
 
 from . import approximant
 from . import catmull_rom as cr
-from .fixed_point import dequantize, quantize
+from .fixed_point import Q2_13, QFormat, dequantize, quantize
 
 SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
 
 
 def scheme_of(impl: str) -> str | None:
     """The registered approximant scheme behind an engine impl (None for
-    non-approximant backends: exact, cr_fixed, region, taylor, base2)."""
+    non-approximant backends: exact, region, taylor, base2, and the
+    ``*_fixed`` integer datapaths, which are not kernelizable)."""
     if impl == "cr":
         return "cr_spline"
     return impl if impl in approximant.schemes() else None
+
+
+def fixed_scheme_of(impl: str) -> str | None:
+    """The registered scheme behind a ``<scheme>_fixed`` engine impl
+    (``cr_fixed`` is the historical alias of ``cr_spline_fixed``)."""
+    if impl == "cr_fixed":
+        return "cr_spline"
+    if impl.endswith("_fixed"):
+        base = scheme_of(impl[: -len("_fixed")])
+        if base is not None:
+            return base
+    return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,8 +76,10 @@ class ActivationConfig:
     """How the framework computes nonlinearities (a model-config field)."""
 
     impl: str = "exact"          # exact|cr|cr_fixed|pwl|poly|rational|
-                                 # region|taylor|base2 (or any registered
-                                 # approximant scheme name)
+                                 # region|taylor|base2, any registered
+                                 # approximant scheme name, or any
+                                 # "<scheme>_fixed" bit-accurate integer
+                                 # datapath (pwl_fixed, poly_fixed, ...)
     depth: int = 32              # LUT depth (paper's flagship: 32)
     x_max: float = 4.0           # table range for tanh (paper: 4.0)
     degree: int = 3              # poly: per-segment degree; rational:
@@ -74,11 +89,15 @@ class ActivationConfig:
                                  # nonlinearity through a single-pass
                                  # Pallas epilogue kernel carrying the
                                  # scheme's datapath (kernels/epilogue.py)
+    int_bits: int = 2            # Q-format of the *_fixed datapaths
+    frac_bits: int = 13          # (the paper's flagship: Q2.13)
 
     def tag(self) -> str:
+        q = "" if (self.int_bits, self.frac_bits) == (2, 13) else \
+            f"-q{self.int_bits}.{self.frac_bits}"
         if self.impl in ("poly", "rational"):
-            return f"{self.impl}-d{self.depth}-g{self.degree}"
-        return f"{self.impl}-d{self.depth}"
+            return f"{self.impl}-d{self.depth}-g{self.degree}{q}"
+        return f"{self.impl}-d{self.depth}{q}"
 
 
 # --------------------------------------------------------------------------
@@ -91,8 +110,9 @@ def tanh_table(x_max: float, depth: int) -> cr.SplineTable:
 
 
 @lru_cache(maxsize=None)
-def tanh_fixed_table(x_max: float, depth: int) -> cr.FixedTable:
-    return cr.build_fixed_table(np.tanh, x_max, depth)
+def tanh_fixed_table(x_max: float, depth: int,
+                     fmt: QFormat = Q2_13) -> cr.FixedTable:
+    return cr.build_fixed_table(np.tanh, x_max, depth, fmt)
 
 
 @lru_cache(maxsize=None)
@@ -149,8 +169,44 @@ def _tanh_scheme(x, cfg: ActivationConfig):
     return approximant.reference(jnp.asarray(x), _approx_spec(cfg, "tanh"))
 
 
+def _make_tanh_scheme_fixed(cfg: ActivationConfig):
+    """Generic ``<scheme>_fixed`` backend: the scheme's bit-accurate
+    integer datapath (``approximant.fixed_block``) at the config's
+    Q-format, with a straight-through JVP through the scheme's own float
+    block so training still differentiates. Mirrors ``cr_fixed`` (which
+    predates the registry and stays pinned to its original codepath)."""
+    scheme = fixed_scheme_of(cfg.impl)
+    spec = approximant.spec_for(scheme, "tanh", x_max=cfg.x_max,
+                                depth=cfg.depth, degree=cfg.degree,
+                                int_bits=cfg.int_bits,
+                                frac_bits=cfg.frac_bits)
+    params_q = jnp.asarray(approximant.fixed_params_for(spec, "tanh"))
+    fmt = spec.qformat
+
+    @jax.custom_jvp
+    def tanh_fixed(x):
+        orig = x.dtype
+        xq = quantize(x.astype(jnp.float32), fmt)
+        yq = approximant.fixed_block(xq, params_q, spec)
+        return dequantize(yq, fmt).astype(orig)
+
+    @tanh_fixed.defjvp
+    def _jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        y = tanh_fixed(x)
+        # straight-through: derivative of the scheme's float datapath
+        dy = jax.jvp(lambda v: approximant.reference(v, spec),
+                     (x,), (dx,))[1]
+        return y, dy
+
+    return tanh_fixed
+
+
 def _make_tanh_cr_fixed(cfg: ActivationConfig):
-    ftab = tanh_fixed_table(cfg.x_max, cfg.depth)
+    # honors the config's Q format (the alias contract with
+    # cr_spline_fixed: same circuit, same swept geometry)
+    ftab = tanh_fixed_table(cfg.x_max, cfg.depth,
+                            QFormat(cfg.int_bits, cfg.frac_bits))
     table = tanh_table(cfg.x_max, cfg.depth)
 
     @jax.custom_jvp
@@ -240,8 +296,19 @@ class ActivationEngine:
         # the registered approximant scheme this engine runs (None for
         # exact / cr_fixed / region / taylor / base2 backends)
         self.act_impl = scheme_of(self.cfg.impl)
+        if fixed_scheme_of(self.cfg.impl) is not None and self.cfg.use_kernel:
+            # fail loudly like the fuse_mlp contract: silently running
+            # the jnp path under a "kernel" flag would report fiction
+            raise ValueError(
+                f"impl={self.cfg.impl!r} is a bit-accurate integer "
+                f"datapath with no Pallas kernel lowering; drop "
+                f"use_kernel=True, or use impl="
+                f"{fixed_scheme_of(self.cfg.impl)!r} for the f32 kernel "
+                f"path")
         if self.cfg.impl == "cr_fixed":
             self._tanh = _make_tanh_cr_fixed(self.cfg)
+        elif fixed_scheme_of(self.cfg.impl) is not None:
+            self._tanh = _make_tanh_scheme_fixed(self.cfg)
         else:
             backend = _TANH_BACKENDS.get(self.cfg.impl)
             if backend is None and self.act_impl is not None:
@@ -250,7 +317,8 @@ class ActivationEngine:
                 raise ValueError(
                     f"unknown activation impl {self.cfg.impl!r}; built-ins: "
                     f"{sorted(_TANH_BACKENDS)} + 'cr_fixed', registered "
-                    f"approximant schemes: {list(approximant.schemes())}")
+                    f"approximant schemes: {list(approximant.schemes())} "
+                    f"(each also available as '<scheme>_fixed')")
             self._tanh = partial(backend, cfg=self.cfg)
 
     @property

@@ -59,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import catmull_rom as cr
+from .fixed_point import GUARD_BITS, QFormat, fx_mul_shift, quantize, sat
 
 # Newton-iteration count for the rational scheme's reciprocal. With the
 # equioscillating linear seed built into the params (error E < 0.6 for
@@ -98,6 +99,33 @@ class ApproxSpec:
     @property
     def inv_period(self) -> float:
         return 1.0 / self.period
+
+    @property
+    def qformat(self) -> QFormat:
+        """The fixed-point format this spec's hardware datapath carries
+        (now swept geometry, not just the paper's Q2.13 constant)."""
+        return QFormat(self.int_bits, self.frac_bits)
+
+    @property
+    def guard_format(self) -> QFormat:
+        """Coefficient-ROM format of MAC-chain schemes: GUARD_BITS extra
+        fraction bits below the datapath LSB."""
+        return QFormat(self.int_bits, self.frac_bits + GUARD_BITS)
+
+    @property
+    def t_bits(self) -> int:
+        """Low bits of the input magnitude forming the local t — the
+        paper's index/t bit-slice, shared by every LUT scheme's fixed
+        datapath. Requires one period to be a power-of-two number of
+        LSBs (power-of-two depth over a power-of-two domain)."""
+        t_scaled = self.period * self.qformat.scale
+        tb = int(round(np.log2(t_scaled)))
+        if 2 ** tb != int(round(t_scaled)):
+            raise ValueError(
+                f"period {self.period} is not a power-of-two number of "
+                f"LSBs in {self.qformat} — the fixed datapath's index/t "
+                f"bit-slice needs pow2 depth over a pow2 domain")
+        return tb
 
     @classmethod
     def of(cls, table: cr.SplineTable) -> "ApproxSpec":
@@ -165,13 +193,15 @@ class Approximant:
     default_geometry: dict = {}
 
     def spec(self, target: str = "tanh", *, x_max: float = 4.0,
-             depth: int = 32, degree: int = 3) -> ApproxSpec:
+             depth: int = 32, degree: int = 3, int_bits: int = 2,
+             frac_bits: int = 13) -> ApproxSpec:
         fn = _target_fn(target)          # curated error for unknown targets
         odd = TARGETS[target][1]
         return ApproxSpec(
             depth=depth, x_max=x_max,
             saturation=float(fn(np.asarray([x_max], np.float64))[0]),
-            scheme=self.scheme, degree=degree, odd=odd)
+            scheme=self.scheme, degree=degree, odd=odd,
+            int_bits=int_bits, frac_bits=frac_bits)
 
     def params_shape(self, spec: ApproxSpec) -> tuple[int, int]:
         raise NotImplementedError
@@ -185,17 +215,35 @@ class Approximant:
         """Pure f32 datapath on an array (reference AND kernel body)."""
         raise NotImplementedError
 
+    def build_fixed(self, spec: ApproxSpec, target: str = "tanh") -> np.ndarray:
+        """Integer parameter ROM (int32 lattice) of the scheme's fixed
+        datapath. Default: the float params quantized to the guard-bit
+        coefficient format — the MAC-chain schemes' ROM; LUT-value
+        schemes (cr_spline, pwl) override to quantize at the datapath
+        format itself."""
+        gfmt = spec.guard_format
+        return np.asarray(quantize(
+            self.build(spec, target).astype(np.float64), gfmt))
+
+    def fixed_block(self, vq, params_q, spec: ApproxSpec):
+        """Bit-accurate integer datapath: int32 lattice in (``spec.qformat``),
+        int32 lattice out — the Fig.-3-style circuit of this scheme."""
+        raise NotImplementedError
+
 
 def spec_for(scheme: str, act: str = "tanh", *, x_max: float = 4.0,
-             depth: int = 32, degree: int = 3) -> ApproxSpec:
+             depth: int = 32, degree: int = 3, int_bits: int = 2,
+             frac_bits: int = 13) -> ApproxSpec:
     """The spec an *epilogue* reads: tanh-family epilogues share one
     tanh approximant; softplus uses the even residual target with the
     same widening the engine's jnp path applies (x_max >= 8, depth >=
     64) so every backend agrees on table contents."""
     if act == "softplus":
         return get(scheme).spec("softplus_res", x_max=max(x_max, 8.0),
-                                depth=max(depth, 64), degree=degree)
-    return get(scheme).spec("tanh", x_max=x_max, depth=depth, degree=degree)
+                                depth=max(depth, 64), degree=degree,
+                                int_bits=int_bits, frac_bits=frac_bits)
+    return get(scheme).spec("tanh", x_max=x_max, depth=depth, degree=degree,
+                            int_bits=int_bits, frac_bits=frac_bits)
 
 
 def target_of(act: str) -> str:
@@ -222,6 +270,20 @@ def reference(x, spec: ApproxSpec, target: str = "tanh"):
               jnp.asarray(x, jnp.float32),
               jnp.asarray(params_for(spec, target)), spec)
     return y.astype(jnp.asarray(x).dtype)
+
+
+@lru_cache(maxsize=None)
+def fixed_params_for(spec: ApproxSpec, target: str = "tanh") -> np.ndarray:
+    """Cached integer ROM of ``spec``'s fixed datapath (host numpy int32)."""
+    return get(spec.scheme).build_fixed(spec, target)
+
+
+def fixed_block(vq, params_q, spec: ApproxSpec):
+    """Generic bit-accurate datapath dispatch: int32 ``spec.qformat``
+    lattice in/out. The fixed-point analogue of ``block`` — the single
+    entry point error analysis and the ``<scheme>_fixed`` engine
+    backends share."""
+    return get(spec.scheme).fixed_block(vq, params_q, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -272,6 +334,42 @@ def _finish(y, v, av, spec: ApproxSpec, odd: bool):
 
 
 # ---------------------------------------------------------------------------
+# shared fixed-datapath pieces (int32 lattice; see core/fixed_point.py)
+# ---------------------------------------------------------------------------
+
+def _sat_q(spec: ApproxSpec) -> int:
+    """The saturation constant on the output lattice (a wired constant
+    in hardware). Pure numpy — callable at trace time — and identical
+    to fixed_point.quantize's host path / build_fixed_table's sat_q."""
+    fmt = spec.qformat
+    q = np.round(np.float64(spec.saturation) * fmt.scale)
+    return int(np.clip(q, fmt.min_int, fmt.max_int))
+
+
+def _fixed_front(vq, spec: ApproxSpec):
+    """The integer front-end every LUT scheme shares (paper Fig. 3):
+    sign strip, |x|, index/t bit-slice, domain-range compare. Returns
+    (sign_neg, idx clipped int32, in_range, t_q raw residue)."""
+    vq = jnp.asarray(vq, jnp.int32)
+    tb = spec.t_bits
+    sign_neg = vq < 0
+    mag = jnp.abs(vq)
+    idx = (mag >> tb).astype(jnp.int32)
+    in_range = idx < spec.depth
+    idx_c = jnp.clip(idx, 0, spec.depth - 1)
+    t_q = mag & ((1 << tb) - 1)
+    return sign_neg, idx_c, in_range, t_q
+
+
+def _fixed_finish(y, sign_neg, in_range, spec: ApproxSpec):
+    """Saturation mux + odd-symmetry sign restore on the lattice."""
+    y = jnp.where(in_range, y, jnp.int32(_sat_q(spec)))
+    if spec.odd:
+        y = jnp.where(sign_neg, -y, y)
+    return y
+
+
+# ---------------------------------------------------------------------------
 # scheme: cr_spline (the paper)
 # ---------------------------------------------------------------------------
 
@@ -300,6 +398,26 @@ class CRSpline(Approximant):
         from repro.kernels.epilogue import _cr_tanh_block  # layout-pinned
         return _cr_tanh_block(v, params, spec=spec, lookup=lookup,
                               odd=spec.odd if odd is None else odd)
+
+    def build_fixed(self, spec, target="tanh"):
+        # quantized from the float64 knot table, EXACTLY as
+        # build_fixed_table does — the CR fixed route must stay
+        # bit-identical to the pre-registry Fig. 3 emulation
+        ftab = cr.build_fixed_table(_target_fn(target), spec.x_max,
+                                    spec.depth, spec.qformat)
+        return np.asarray(ftab.windows_q)
+
+    def fixed_block(self, vq, params_q, spec):
+        # the authoritative CR integer datapath is
+        # catmull_rom.interpolate_fixed; adapt it to the registry API
+        # (same index geometry: FixedTable.t_bits == spec.t_bits).
+        # Note the inherited wide-lattice caveat: geometries with
+        # t_bits > 10 (depth 8/16 at Q2.13, any depth <= 32 at Q2.16)
+        # take basis_weights_fixed's int64 fallback, which is for plain
+        # traces only — flagship shapes are int32 and fully jit-able.
+        ftab = cr.FixedTable(spec.qformat, spec.x_max, spec.depth,
+                             spec.t_bits, params_q, _sat_q(spec))
+        return cr.interpolate_fixed(ftab, vq)
 
 
 # ---------------------------------------------------------------------------
@@ -334,6 +452,29 @@ class PWL(Approximant):
         ki, t = _index_t_split(av, spec)
         y0, dy = _gather_columns(params, ki, lookup)
         return _finish(y0 + t * dy, v, av, spec, odd)
+
+    def build_fixed(self, spec, target="tanh"):
+        # knots quantized to the OUTPUT lattice, deltas formed on the
+        # lattice (y_q[k+1] - y_q[k]) so segment ends land exactly on
+        # the quantized knots — the hardware's second LUT column
+        fn = _target_fn(target)
+        ks = np.arange(spec.depth + 1, dtype=np.float64) * spec.period
+        yq = np.asarray(quantize(fn(ks), spec.qformat))
+        return np.stack([yq[:-1], np.diff(yq)], axis=1).astype(np.int32)
+
+    def fixed_block(self, vq, params_q, spec):
+        # the integer value+delta MAC: y = y0 + (t_q * dy) >>r t_bits,
+        # one product with a rounding adder folded into the shift
+        sign_neg, idx, in_range, t_q = _fixed_front(vq, spec)
+        tb = spec.t_bits
+        y0 = jnp.take(params_q[:, 0], idx)
+        dy = jnp.take(params_q[:, 1], idx)
+        # |dy| <= slope * period on the lattice: tb+1 bits covers every
+        # target with |f'| <= 1 (tanh family and the softplus residual)
+        step = fx_mul_shift(dy, t_q, tb, rounding="nearest",
+                            a_bits=tb + 1, b_bits=tb)
+        y = sat(y0 + step, spec.qformat)
+        return _fixed_finish(y, sign_neg, in_range, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -402,6 +543,24 @@ class PiecewisePoly(Approximant):
         for c in coeffs[1:]:                 # Horner, degree static
             y = y * t + c
         return _finish(y, v, av, spec, odd)
+
+    def fixed_block(self, vq, params_q, spec):
+        # truncating Horner chain over the guard-bit coefficient ROM:
+        # each MAC stage is (acc * t_q) >> t_bits (a plain wire shift —
+        # truncation, as synthesized MAC chains do) plus the next ROM
+        # coefficient, all in the guard format; ONE rounding shift at
+        # the end drops the guard bits into the output register
+        sign_neg, idx, in_range, t_q = _fixed_front(vq, spec)
+        tb = spec.t_bits
+        gfmt = spec.guard_format
+        acc_bits = spec.int_bits + gfmt.frac_bits + 1
+        acc = jnp.take(params_q[:, 0], idx)
+        for j in range(1, spec.degree + 1):
+            step = fx_mul_shift(t_q, acc, tb, rounding="floor",
+                                a_bits=tb, b_bits=acc_bits)
+            acc = sat(step + jnp.take(params_q[:, j], idx), gfmt)
+        y = sat((acc + (1 << (GUARD_BITS - 1))) >> GUARD_BITS, spec.qformat)
+        return _fixed_finish(y, sign_neg, in_range, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -505,3 +664,72 @@ class PadeRational(Approximant):
         # convergents are increasing, so min() keeps monotonicity
         y = jnp.minimum(num * r, jnp.float32(spec.saturation))
         return _finish(y, v, av, spec, odd)
+
+    def _internal_int_bits(self, spec) -> int:
+        """Integer bits of the chain's internal format: wide enough for
+        den(x_max^2) (the largest value the datapath carries), computed
+        host-side from the same continued fraction the params bake in."""
+        order = self._order(spec.degree)
+        num, den = _pade_from_cf(order)
+        big_d = float(np.polyval((den / den[0])[::-1], spec.x_max ** 2))
+        return max(spec.int_bits, int(np.ceil(np.log2(big_d))) + 1)
+
+    def fixed_block(self, vq, params_q, spec):
+        # the integer Padé + Newton-reciprocal chain. Everything runs in
+        # an internal guard format Q<gI>.<frac+GUARD_BITS> whose integer
+        # width gI covers den(x_max^2); each product is one wide MAC
+        # with a rounding adder folded into its single output shift
+        # (truncating MACs measurably cost one extra LSB at high CF
+        # orders). fx_mul_shift picks the exact int32 lowering — the
+        # wide den/Newton products use the 4-piece partial-product
+        # decomposition, so the whole chain is jit/TPU-legal with no
+        # int64 anywhere.
+        fmt = spec.qformat
+        gfmt = spec.guard_format
+        gf = gfmt.frac_bits
+        ifmt = QFormat(self._internal_int_bits(spec), gf)
+        w = ifmt.int_bits + gf + 1           # operand magnitude bound
+        vq = jnp.asarray(vq, jnp.int32)
+        sign_neg = vq < 0
+        mag = jnp.abs(vq)
+        xmax_q = int(round(spec.x_max * fmt.scale))
+        in_range = mag < xmax_q
+        avc = jnp.minimum(mag, xmax_q)       # keep den in range
+        in_b = spec.int_bits + spec.frac_bits + 1
+        # u = x^2 straight into the guard format: one squarer, shift
+        # 2*frac - (frac+G) = frac - G (needs frac_bits > GUARD_BITS)
+        if spec.frac_bits <= GUARD_BITS:
+            raise ValueError(
+                f"rational fixed datapath needs frac_bits > {GUARD_BITS} "
+                f"guard bits, got {spec.qformat}")
+        u = fx_mul_shift(avc, avc, spec.frac_bits - GUARD_BITS,
+                         rounding="nearest", a_bits=in_b, b_bits=in_b)
+        u_bits = 2 * spec.int_bits + gf + 1
+        k = params_q.shape[1]
+        num = params_q[0, k - 1]
+        den = params_q[1, k - 1]
+        for j in range(k - 2, -1, -1):       # two Horner chains in u
+            num = sat(fx_mul_shift(num, u, gf, rounding="nearest",
+                                   a_bits=w, b_bits=u_bits)
+                      + params_q[0, j], ifmt)
+            den = sat(fx_mul_shift(den, u, gf, rounding="nearest",
+                                   a_bits=w, b_bits=u_bits)
+                      + params_q[1, j], ifmt)
+        # seeded Newton reciprocal: r <- r * (2 - den * r), no divider
+        two_g = 2 << gf
+        r = sat(params_q[2, 0]
+                - fx_mul_shift(params_q[2, 1], den, gf, rounding="nearest",
+                               a_bits=gf + 2, b_bits=w), ifmt)
+        for _ in range(NEWTON_ITERS):
+            dr = fx_mul_shift(den, r, gf, rounding="nearest",
+                              a_bits=w, b_bits=w)
+            r = sat(fx_mul_shift(r, two_g - dr, gf, rounding="nearest",
+                                 a_bits=w, b_bits=w), ifmt)
+        ratio = sat(fx_mul_shift(num, r, gf, rounding="nearest",
+                                 a_bits=w, b_bits=w), ifmt)
+        # final multiplier drops back to the output lattice; clamp the
+        # Padé overshoot at the saturation constant (monotone branch)
+        y = fx_mul_shift(ratio, avc, gf, rounding="nearest",
+                         a_bits=gf + 2, b_bits=in_b)
+        y = sat(jnp.minimum(y, _sat_q(spec)), fmt)
+        return _fixed_finish(y, sign_neg, in_range, spec)

@@ -11,7 +11,9 @@ three datapaths per method and assert the paper-matching one:
   float      float table, float arithmetic
   qlut       Q2.13-quantized LUT entries, float arithmetic
   qout       qlut + output rounded to Q2.13                  <- paper's tables
-  fixed      full Fig. 3 bit-accurate datapath (cr only)
+  fixed      full bit-accurate integer datapath, any registered scheme
+             (Fig. 3 circuit for CR; value+delta MAC for PWL; truncating
+             Horner chain for poly; Newton-reciprocal Padé for rational)
 
 At depth 64 the paper's CR max error is exactly one LSB (2^-13 = 0.000122)
 and its RMS ~= sqrt(lut_floor^2 + output_floor^2): the published tables are
@@ -27,7 +29,8 @@ import numpy as np
 
 from . import approximant
 from . import catmull_rom as cr
-from .fixed_point import Q2_13, QFormat, dequantize, quantize, representable_grid
+from .fixed_point import (GUARD_BITS, Q2_13, QFormat, dequantize, quantize,
+                          representable_grid)
 
 # Paper Tables I and II: sampling period -> (depth, pwl_rms, cr_rms, pwl_max, cr_max)
 PAPER_TABLE_1_2 = {
@@ -77,24 +80,33 @@ def tanh_error(method: str, depth: int, x_max: float = 4.0,
     'cr_spline' aliases 'cr'; 'poly'/'rational' take ``degree``. For
     registered schemes the qlut datapath quantizes the scheme's params
     to the Q format; qout additionally rounds the output, modeling an
-    end-to-end fixed-point unit the way the paper's tables do.
+    end-to-end fixed-point unit the way the paper's tables do. The
+    fixed datapath is the bit-accurate integer circuit of ANY
+    registered scheme (``approximant.fixed_block``), with ``fmt`` as
+    the swept Q format; the CR route stays bit-identical to the
+    original Fig. 3 emulation (core/catmull_rom.py::interpolate_fixed).
     """
-    grid = representable_grid(fmt)          # float64 [65536]
+    grid = representable_grid(fmt)          # float64 [2^(1+int+frac)]
     exact = np.tanh(grid)
     x = jnp.asarray(grid, jnp.float64) if jax.config.jax_enable_x64 else jnp.asarray(grid, jnp.float32)
     if method == "cr_spline":
         method = "cr"
 
     if datapath == "fixed":
-        if method != "cr":
+        scheme = "cr_spline" if method == "cr" else method
+        if scheme not in approximant.schemes():
             raise ValueError(
-                f"datapath='fixed' is the bit-accurate Fig. 3 CR circuit "
-                f"emulation (core/catmull_rom.py::interpolate_fixed); it is "
-                f"not implemented for scheme {method!r} — use datapath="
-                f"'qout' for an end-to-end quantized model of that scheme")
-        ftab = cr.build_fixed_table(np.tanh, x_max, depth, fmt)
-        xq = quantize(x, fmt)
-        y = np.asarray(dequantize(cr.interpolate_fixed(ftab, xq), fmt))
+                f"datapath='fixed' needs a registered approximant scheme "
+                f"with an integer datapath, got {method!r}; registered: "
+                f"{sorted(approximant.schemes())}")
+        spec = approximant.spec_for(scheme, "tanh", x_max=x_max,
+                                    depth=depth, degree=degree,
+                                    int_bits=fmt.int_bits,
+                                    frac_bits=fmt.frac_bits)
+        params_q = jnp.asarray(approximant.fixed_params_for(spec, "tanh"))
+        xq = quantize(grid, fmt)             # host float64 -> exact lattice
+        y = np.asarray(dequantize(
+            approximant.fixed_block(xq, params_q, spec), fmt))
         return _stats(y, exact)
 
     if datapath not in ("float", "qlut", "qout"):
@@ -112,11 +124,12 @@ def tanh_error(method: str, depth: int, x_max: float = 4.0,
                                     depth=depth, degree=degree)
         params = approximant.params_for(spec, "tanh")
         if datapath in ("qlut", "qout"):
-            # coefficient ROM with 6 guard bits below the datapath LSB —
-            # standard practice for MAC-chain schemes (poly/rational),
-            # where raw-format coefficient rounding would be amplified
-            # by u = x^2 powers far above the output LSB
-            cfmt = QFormat(fmt.int_bits, fmt.frac_bits + 6)
+            # coefficient ROM with GUARD_BITS guard bits below the
+            # datapath LSB — standard practice for MAC-chain schemes
+            # (poly/rational), where raw-format coefficient rounding
+            # would be amplified by u = x^2 powers far above the output
+            # LSB (the same ROM format the fixed datapath carries)
+            cfmt = QFormat(fmt.int_bits, fmt.frac_bits + GUARD_BITS)
             params = np.asarray(
                 dequantize(quantize(params.astype(np.float64), cfmt), cfmt))
         y = np.asarray(approximant.block(jnp.asarray(x, jnp.float32),

@@ -12,7 +12,6 @@ These helpers are pure jnp and usable inside jit / Pallas (interpret).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax.numpy as jnp
 import numpy as np
@@ -52,6 +51,14 @@ class QFormat:
 
 # The paper's format: 16-bit signed, range (-4, 4), resolution 2^-13.
 Q2_13 = QFormat(int_bits=2, frac_bits=13)
+
+# Guard bits carried by coefficient ROMs of MAC-chain schemes (poly /
+# rational) below the datapath LSB — standard VLSI practice: raw-format
+# coefficient rounding would be amplified by the u = x^2 powers far
+# above the output LSB. Shared by the error-analysis qlut model, the
+# fixed datapaths and the gate-count model so all three describe the
+# same hardware.
+GUARD_BITS = 6
 
 
 def quantize(x, fmt: QFormat = Q2_13, rounding: str = "nearest"):
@@ -103,6 +110,76 @@ def fx_mul(a, b, fmt: QFormat = Q2_13, rounding: str = "floor"):
     else:
         raise ValueError(f"unknown rounding {rounding!r}")
     return sat(shifted.astype(jnp.int32), fmt)
+
+
+def fx_mul_shift(a, b, shift: int, *, rounding: str = "floor",
+                 a_bits: int = 15, b_bits: int = 15):
+    """Exact wide product with one output shift on int32 lanes:
+    ``(a*b [+ 2^(shift-1)]) >> shift``, the primitive MAC step of every
+    fixed datapath (PWL slope MAC, truncating Horner stages, Newton
+    reciprocal steps).
+
+    ``a``/``b`` are int32 lattice values; the result is int32 and NOT
+    saturated (callers ``sat`` into their own format, as the hardware's
+    output register would). ``a_bits``/``b_bits`` are *static* magnitude
+    bounds (|a| < 2^a_bits) the caller knows from its format widths;
+    they select the cheapest exact lowering — all three are int32-only
+    (no int64: it neither exists on TPU vector lanes nor lowers
+    reliably under the ambient 32-bit config), mirroring the partial-
+    product decomposition a synthesized wide MAC pipelines:
+
+      direct     a_bits + b_bits <= 30: one int32 product.
+      2-piece    radix-2^s split of the wider operand with a progressive
+                 carry (the fx_dot4 trick), exact when the narrow
+                 operand times each piece fits 31 bits and shift >= s.
+      4-piece    both operands split at 2^13 into four partial products
+                 with full carry propagation — exact for products up to
+                 57 bits provided the *shifted result* fits int32
+                 (callers saturate into <= 30-bit formats, so it does).
+
+    ``rounding='floor'`` is a plain wire shift (truncating MAC);
+    ``'nearest'`` models a rounding adder folded into the shift.
+    """
+    if rounding not in ("floor", "nearest"):
+        raise ValueError(f"unknown rounding {rounding!r}")
+    if shift < 0:
+        raise ValueError(f"fx_mul_shift needs shift >= 0, got {shift}")
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    r_add = (1 << (shift - 1)) if (rounding == "nearest" and shift > 0) else 0
+    if a_bits + b_bits <= 30:
+        return (a * b + r_add) >> shift
+    # 2-piece: split the WIDER operand so the narrow one multiplies
+    # each piece; exact floor-division composition:
+    # (a*b + R) >> shift == (a*b_hi + ((a*b_lo + R) >> s)) >> (shift-s)
+    if a_bits > b_bits:
+        a, b = b, a
+        a_bits, b_bits = b_bits, a_bits
+    s = b_bits + a_bits - 30                 # smallest exact piece split
+    if 1 <= s <= shift and a_bits + s <= 30:
+        mask = (1 << s) - 1
+        lo = (a * (b & mask) + r_add) >> s
+        return (a * (b >> s) + lo) >> (shift - s)
+    # 4-piece: a = a1*2^13 + a0, b = b1*2^13 + b0 (hi arithmetic-shifted,
+    # keeps sign; lo unsigned) -> four partials, each < 2^31:
+    #   p11 < 2^(A+B-2S) (needs A+B <= 57), p10 < 2^A, p01 < 2^B,
+    #   p00 < 2^2S; the rounding addend folds in piece-aligned, then two
+    #   carry propagations reassemble the exact wide sum.
+    S = 13
+    if a_bits + b_bits > 31 + 2 * S or max(a_bits, b_bits) > 31:
+        raise ValueError(
+            f"fx_mul_shift: {a_bits}+{b_bits}-bit product exceeds the "
+            f"exact int32 4-piece decomposition (57 bits)")
+    m = (1 << S) - 1
+    a1, a0 = a >> S, a & m
+    b1, b0 = b >> S, b & m
+    c0 = a0 * b0 + (r_add & m)
+    t1 = a1 * b0 + a0 * b1 + ((r_add >> S) & m) + (c0 >> S)
+    t2 = a1 * b1 + (r_add >> (2 * S)) + (t1 >> S)
+    if shift >= 2 * S:
+        return t2 >> (shift - 2 * S)
+    rem = ((t1 & m) << S) + (c0 & m)         # < 2^2S: fits, >= 0
+    return (t2 << (2 * S - shift)) + (rem >> shift)
 
 
 def fx_dot4(p, c, fmt: QFormat = Q2_13, rounding: str = "nearest",

@@ -103,16 +103,22 @@ def cr_spline_datapath(frac_bits: int = 13, depth: int = 32,
         gates=total, memory_kbits=0.0, breakdown=b)
 
 
-def pwl_datapath(frac_bits: int = 13, depth: int = 32) -> AreaReport:
+def pwl_datapath(frac_bits: int = 13, depth: int = 32,
+                 x_int_bits: int = 2) -> AreaReport:
     """PWL interpolator matching the registered ``pwl`` approximant's
-    datapath (core/approximant.py::PWL): a [depth, 2] value+delta LUT
-    (both columns counted — the delta column is what spares a runtime
-    subtractor), one slope multiplier, one adder."""
+    FIXED datapath (core/approximant.py::PWL.fixed_block): a [depth, 2]
+    value+delta LUT (both columns counted — the delta column is what
+    spares a runtime subtractor), one truncated slope multiplier of the
+    exact widths the integer MAC carries (delta x t-residue), one adder.
+    All widths grow with the Q format."""
+    import math
     n = frac_bits
+    in_bits = 1 + x_int_bits + frac_bits
+    t_bits = max(x_int_bits + frac_bits - int(math.log2(depth)), 1)
     b = {
-        "abs+sign": adder(n) + mux(n),
+        "abs+sign": adder(in_bits) + mux(in_bits),
         "lut_value_delta": const_lut(depth, 2 * n),
-        "slope_mult": multiplier(n, n),
+        "slope_mult": TRUNC_MULT * multiplier(t_bits + 1, t_bits),
         "add": adder(n),
         "saturation": adder(n) + mux(n),
     }
@@ -121,21 +127,28 @@ def pwl_datapath(frac_bits: int = 13, depth: int = 32) -> AreaReport:
 
 
 def poly_datapath(frac_bits: int = 13, depth: int = 8,
-                  degree: int = 3) -> AreaReport:
-    """Piecewise-polynomial (DCTIF-style) unit: a [depth, degree+1]
-    coefficient LUT feeding ``degree`` Horner stages. Each stage is one
-    truncated (n x t_bits) multiplier plus an adder; the coefficient ROM
-    carries 6 guard bits below the datapath LSB (matching the
-    error-analysis model), which is what synthesis sees."""
+                  degree: int = 3, x_int_bits: int = 2) -> AreaReport:
+    """Piecewise-polynomial (DCTIF-style) unit matching the ``poly``
+    fixed datapath: a [depth, degree+1] coefficient LUT feeding
+    ``degree`` truncating Horner stages. Each stage is one truncated
+    (coeff x t_bits) multiplier plus a guard-width adder; the
+    coefficient ROM carries GUARD_BITS guard bits below the datapath
+    LSB (matching the error-analysis model and the integer circuit),
+    which is what synthesis sees; one rounding shift drops the guard
+    bits at the output."""
     import math
+
+    from .fixed_point import GUARD_BITS
     n = frac_bits
-    coeff_bits = n + 6
-    t_bits = max(2 + frac_bits - int(math.log2(depth)), 1)
+    in_bits = 1 + x_int_bits + frac_bits
+    coeff_bits = n + GUARD_BITS
+    t_bits = max(x_int_bits + frac_bits - int(math.log2(depth)), 1)
     b = {
-        "abs+sign": adder(n) + mux(n),
+        "abs+sign": adder(in_bits) + mux(in_bits),
         "lut_coeffs": const_lut(depth, (degree + 1) * coeff_bits),
         "horner_mults": degree * TRUNC_MULT * multiplier(coeff_bits, t_bits),
         "horner_adds": degree * adder(coeff_bits),
+        "round_shift": adder(n),
         "saturation": adder(n) + mux(n),
     }
     return AreaReport(
@@ -144,34 +157,40 @@ def poly_datapath(frac_bits: int = 13, depth: int = 8,
 
 
 def rational_datapath(frac_bits: int = 13, degree: int = 5,
-                      newton_iters: int | None = None) -> AreaReport:
+                      newton_iters: int | None = None,
+                      x_int_bits: int = 2) -> AreaReport:
     """Padé + Newton-reciprocal unit (no divider, no LUT beyond the
-    wired coefficient constants): u = x^2, two Horner chains in u for
-    num/den, one linear-seed MAC, then ``newton_iters`` iterations of
-    r <- r(2 - d r) at two multipliers + one subtractor each, and the
-    final num * r multiplier. Coefficients are wired constants
-    (synthesis folds them into the multipliers; counted as full
-    multipliers here, i.e. conservatively). ``newton_iters`` defaults to
-    the iteration count the emulated datapath actually runs
+    wired coefficient constants) at the widths the fixed datapath
+    carries: u = x^2 lands straight in the guard format, two Horner
+    chains in u for num/den run at internal width ``g`` = frac +
+    GUARD_BITS (+ the integer bits covering den(x_max^2)), one
+    linear-seed MAC, then ``newton_iters`` iterations of r <- r(2 - d r)
+    at two multipliers + one subtractor each, and the final num * r
+    multiplier dropping back to the output lattice. Coefficients are
+    wired constants (synthesis folds them into the multipliers; counted
+    as full multipliers here, i.e. conservatively). ``newton_iters``
+    defaults to the iteration count the emulated datapath actually runs
     (approximant.NEWTON_ITERS), so area and benchmark stay in lockstep."""
     from .approximant import NEWTON_ITERS, PadeRational
+    from .fixed_point import GUARD_BITS
     if newton_iters is None:
         newton_iters = NEWTON_ITERS
     order = PadeRational._order(degree)   # same rounding as the datapath
     n = frac_bits
-    coeff_bits = n + 6
+    in_bits = 1 + x_int_bits + frac_bits
+    g = n + GUARD_BITS        # internal fraction width (guard format)
     k = order // 2            # Horner stages per chain in u
     b = {
-        "abs+sign": adder(n) + mux(n),
-        "u_square": TRUNC_MULT * multiplier(n, n),
-        "horner_num": k * (TRUNC_MULT * multiplier(coeff_bits, n)
-                           + adder(coeff_bits)),
-        "horner_den": k * (TRUNC_MULT * multiplier(coeff_bits, n)
-                           + adder(coeff_bits)),
-        "newton_seed": TRUNC_MULT * multiplier(coeff_bits, n) + adder(coeff_bits),
-        "newton_iters": newton_iters * (2 * TRUNC_MULT * multiplier(n + 2, n + 2)
-                                        + adder(n + 2)),
-        "final_mult": TRUNC_MULT * multiplier(n + 1, n + 2),
+        "abs+sign": adder(in_bits) + mux(in_bits),
+        "u_square": TRUNC_MULT * multiplier(in_bits - 1, in_bits - 1),
+        "horner_num": k * (TRUNC_MULT * multiplier(g, g)
+                           + adder(g)),
+        "horner_den": k * (TRUNC_MULT * multiplier(g, g)
+                           + adder(g)),
+        "newton_seed": TRUNC_MULT * multiplier(g, g) + adder(g),
+        "newton_iters": newton_iters * (2 * TRUNC_MULT * multiplier(g, g)
+                                        + adder(g)),
+        "final_mult": TRUNC_MULT * multiplier(g, in_bits - 1),
         "saturation": adder(n) + mux(n),
     }
     return AreaReport(
@@ -184,16 +203,17 @@ def approximant_datapath(spec) -> AreaReport:
     dispatches on ``spec.scheme`` with the spec's own geometry and
     fixed-point format."""
     if spec.scheme == "cr_spline":
-        import math
         return cr_spline_datapath(spec.frac_bits, spec.depth,
-                                  x_int_bits=max(
-                                      int(math.ceil(math.log2(spec.x_max))), 1))
+                                  x_int_bits=spec.int_bits)
     if spec.scheme == "pwl":
-        return pwl_datapath(spec.frac_bits, spec.depth)
+        return pwl_datapath(spec.frac_bits, spec.depth,
+                            x_int_bits=spec.int_bits)
     if spec.scheme == "poly":
-        return poly_datapath(spec.frac_bits, spec.depth, spec.degree)
+        return poly_datapath(spec.frac_bits, spec.depth, spec.degree,
+                             x_int_bits=spec.int_bits)
     if spec.scheme == "rational":
-        return rational_datapath(spec.frac_bits, spec.degree)
+        return rational_datapath(spec.frac_bits, spec.degree,
+                                 x_int_bits=spec.int_bits)
     raise ValueError(f"no gate-count model for scheme {spec.scheme!r}; "
                      "add one to core/gatecount.py::approximant_datapath")
 

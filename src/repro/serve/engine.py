@@ -143,6 +143,13 @@ class EngineConfig:
                                 # "serial": one request per dispatch (the
                                 # PR-2 baseline granularity, kept for
                                 # benchmarking)
+    trim_drain: bool = True     # cap the final decode chunks at the
+                                # largest remaining per-slot budget
+                                # instead of always running `chunk`
+                                # in-jit steps (costs at most a handful
+                                # of extra compiled chunk sizes, saves
+                                # the wasted drain steps; False keeps
+                                # the untrimmed PR-2/3 behavior)
     seed: int = 0
 
     def __post_init__(self):
@@ -165,14 +172,25 @@ class EngineStats:
     prefill_padded_tokens: int = 0  # incl. bucket padding
     prefill_batches: int = 0       # admission dispatches
     prefill_requests: int = 0      # requests admitted across dispatches
+    insert_s: float = 0.0          # slot-insert dispatch time (the other
+                                   # half of admission: untimed before,
+                                   # so prefill_tokens_per_s overstated
+                                   # admission throughput)
     decode_s: float = 0.0
     decode_chunks: int = 0
-    decode_steps: int = 0          # chunks * chunk (batch-wide steps)
+    decode_steps: int = 0          # sum of per-chunk in-jit steps
     decode_tokens: int = 0         # real tokens emitted during decode
 
     @property
     def prefill_tokens_per_s(self):
         return self.prefill_tokens / self.prefill_s if self.prefill_s else 0.0
+
+    @property
+    def admission_tokens_per_s(self):
+        """Honest admission throughput: prompt tokens over the WHOLE
+        admission path (ragged prefill + batched slot insert)."""
+        denom = self.prefill_s + self.insert_s
+        return self.prefill_tokens / denom if denom else 0.0
 
     @property
     def decode_tokens_per_s(self):
@@ -224,19 +242,20 @@ class ServeEngine:
 
         prefill = make_prefill_sample(cfg, self.capacity)
         insert = make_slot_insert(cfg)
-        decode = make_decode_chunk(cfg, self.ecfg.chunk)
 
+        self._decode_fns: dict = {}    # in-jit step count -> jitted chunk
         if mesh is None:
+            self._shardings = None
             self.params, self.cache, self.state = params, cache, state
             self._prefill = jax.jit(prefill)
             self._insert = jax.jit(insert, donate_argnums=(0, 1))
-            self._decode = jax.jit(decode, donate_argnums=(1, 2))
         else:
             psh, csh, repl = steps_mod.serve_shardings(
                 cfg, B, self.ecfg.max_len, mesh, self.rules)
             ssh = {name: repl for name in state}
             vsh = {name: repl for name in
                    ("tok", "emitted", "active", "budget", "temp", "eos")}
+            self._shardings = (psh, csh, ssh, repl)
             self.params = jax.device_put(params, psh)
             self.cache = jax.device_put(cache, csh)
             self.state = jax.device_put(state, ssh)
@@ -249,15 +268,32 @@ class ServeEngine:
                 self._under_rules(insert),
                 in_shardings=(csh, ssh, repl, csh, vsh),
                 out_shardings=(csh, ssh), donate_argnums=(0, 1))
-            self._decode = jax.jit(
-                self._under_rules(decode),
-                in_shardings=(psh, csh, ssh),
-                out_shardings=(csh, ssh, repl), donate_argnums=(1, 2))
+        self._decode_at(self.ecfg.chunk)     # seed the cache per config
 
         self.sched = FifoScheduler(B)
         self.stats = EngineStats()
         self.completions: list[Completion] = []
         self._uid = 0
+
+    def _decode_at(self, n_steps: int):
+        """The jitted decode chunk running ``n_steps`` in-jit steps,
+        built (and cached) on demand; jit compilation itself stays lazy
+        (first call per size). Drain trimming adds at most a handful of
+        sizes beyond ``ecfg.chunk`` per engine lifetime (one per
+        distinct final remaining-budget value — typically one)."""
+        fn = self._decode_fns.get(n_steps)
+        if fn is None:
+            decode = make_decode_chunk(self.cfg, n_steps)
+            if self._shardings is None:
+                fn = jax.jit(decode, donate_argnums=(1, 2))
+            else:
+                psh, csh, ssh, repl = self._shardings
+                fn = jax.jit(
+                    self._under_rules(decode),
+                    in_shardings=(psh, csh, ssh),
+                    out_shardings=(csh, ssh, repl), donate_argnums=(1, 2))
+            self._decode_fns[n_steps] = fn
+        return fn
 
     def _under_rules(self, fn):
         """Trace `fn` under this engine's (mesh, rules) context so the
@@ -347,9 +383,15 @@ class ServeEngine:
             "temp": temps,
             "eos": jnp.asarray([r.eos_id for r in reqs], jnp.int32),
         }
+        t0 = time.perf_counter()
         self.cache, self.state = self._insert(
             self.cache, self.state,
             jnp.asarray(slots[:N], jnp.int32), small_cache, slot_vals)
+        # the insert is the other half of admission: sync (any output of
+        # the one dispatch) so its cost lands in the stats instead of
+        # being silently attributed to the next decode chunk
+        jax.block_until_ready(self.state["tok"])
+        self.stats.insert_s += time.perf_counter() - t0
         for i in np.nonzero(live)[0]:
             self.sched.bind(slots[i], SlotRun(
                 request=reqs[i], tokens=[int(tok0[i])], admitted_at=now))
@@ -384,8 +426,26 @@ class ServeEngine:
         if not active:
             return False
 
+        n_steps = self.ecfg.chunk
+        if self.ecfg.trim_drain:
+            # drain cap: when every surviving slot's remaining budget is
+            # below the chunk size, run a shorter final chunk instead of
+            # paying for in-jit steps that only decode dead rows. The
+            # host knows each slot's remaining budget exactly (EOS can
+            # only end a row EARLIER, never extend it). Note: a trimmed
+            # chunk advances the on-device RNG stream fewer times, so
+            # temperature>0 sampling after a drain differs from the
+            # untrimmed path; greedy decode is token-identical.
+            need = max(
+                min(run.request.max_new,
+                    self.ecfg.max_len - len(run.request.tokens))
+                - len(run.tokens)
+                for run in (self.sched.slots[b] for b in active))
+            n_steps = max(1, min(n_steps, need))
+
+        decode = self._decode_at(n_steps)
         t0 = time.perf_counter()
-        self.cache, self.state, toks = self._decode(
+        self.cache, self.state, toks = decode(
             self.params, self.cache, self.state)
         toks = np.asarray(toks)                            # [T, B]; syncs
         self.stats.decode_s += time.perf_counter() - t0

@@ -104,18 +104,25 @@ class FifoScheduler:
         request can never be starved by later arrivals — and requests
         left behind keep their relative order. Grouping by bucket is what
         lets the engine prefill the whole batch in ONE ragged dispatch
-        instead of one dispatch per request."""
+        instead of one dispatch per request.
+
+        Scanning stops as soon as the batch is full: the untouched tail
+        is never popped/re-appended (an earlier version rotated the
+        whole queue through popleft/append on every admission round —
+        O(queue) churn per batch under load for no benefit)."""
         if n < 1 or not self.queue:
             return []
         head_bucket = bucket_of(len(self.queue[0].tokens))
-        taken, rest = [], []
-        while self.queue:
+        taken, skipped = [], []
+        while self.queue and len(taken) < n:
             req = self.queue.popleft()
-            if len(taken) < n and bucket_of(len(req.tokens)) == head_bucket:
+            if bucket_of(len(req.tokens)) == head_bucket:
                 taken.append(req)
             else:
-                rest.append(req)
-        self.queue.extend(rest)
+                skipped.append(req)
+        # skipped requests return to the FRONT (before the untouched
+        # tail), preserving the original relative order
+        self.queue.extendleft(reversed(skipped))
         return taken
 
     def bind(self, slot: int, run: SlotRun) -> None:

@@ -95,6 +95,30 @@ class TestDesignContract:
         err = np.max(np.abs(y - np.tanh(np.asarray(grid, np.float64))))
         assert err < 0.03, (scheme, err)   # even rational deg-3 < 0.019
 
+    def test_fixed_block_contract(self, scheme):
+        """The design contract extends to the scheme's INTEGER datapath:
+        int32 ROM with the scheme's params_shape, exact odd symmetry on
+        the lattice, exact saturation, and tanh tracked to the same
+        bound as the float block (full-grid <= 1-LSB parity lives in
+        tests/test_fixed_datapath.py)."""
+        from repro.core.fixed_point import Q2_13, dequantize, quantize
+        spec, _ = spec_and_params(scheme)
+        params_q = apx.fixed_params_for(spec, "tanh")
+        assert params_q.dtype == np.int32
+        assert tuple(params_q.shape) == tuple(
+            apx.get(scheme).params_shape(spec))
+        grid = representable_grid()
+        xq = quantize(grid, Q2_13)
+        pq = jnp.asarray(params_q)
+        y = np.asarray(apx.get(scheme).fixed_block(xq, pq, spec))
+        yn = np.asarray(apx.get(scheme).fixed_block(-xq, pq, spec))
+        np.testing.assert_array_equal(yn, -y)
+        sat_q = int(np.round(spec.saturation * Q2_13.scale))
+        assert np.max(np.abs(y)) <= sat_q
+        err = np.max(np.abs(np.asarray(dequantize(jnp.asarray(y), Q2_13),
+                                       np.float64) - np.tanh(grid)))
+        assert err < 0.03, (scheme, err)
+
 
 def test_monotone_at_every_dse_swept_geometry():
     """The design contract must hold at EVERY geometry the DSE sweeps,
@@ -188,11 +212,15 @@ class TestEngineSchemes:
 
 
 class TestAnalysisSurface:
-    def test_fixed_datapath_is_cr_only_and_says_so(self):
-        for scheme in ("pwl", "poly", "rational"):
-            with pytest.raises(ValueError, match=scheme):
-                tanh_error(scheme, 32, datapath="fixed")
-        # the CR route still works (and cr_spline aliases cr)
+    def test_fixed_datapath_covers_every_scheme(self):
+        # the DSE fidelity layer: datapath='fixed' is the bit-accurate
+        # integer circuit of ANY registered scheme (deep coverage in
+        # tests/test_fixed_datapath.py)
+        for scheme in apx.schemes():
+            geom = GEOMETRIES[scheme]
+            st = tanh_error(scheme, geom.get("depth", 32), datapath="fixed",
+                            degree=geom.get("degree", 3))
+            assert 0.0 < st.max < 0.03, scheme
         assert tanh_error("cr_spline", 32, datapath="fixed").max < 5e-4
 
     @pytest.mark.parametrize("scheme", sorted(GEOMETRIES))

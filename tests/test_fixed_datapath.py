@@ -1,0 +1,327 @@
+"""The scheme-generic bit-exact fixed-point datapath (the DSE fidelity
+layer): every registered approximant has an integer circuit emulation
+(``Approximant.fixed_block`` on ``core/fixed_point.py`` primitives), and
+the design-space explorer scores THAT, not a float stand-in.
+
+Four layers of guarantees:
+  * the wide-MAC primitive ``fx_mul_shift`` is exact against Python
+    bignum arithmetic across all three of its int32 lowerings;
+  * per-scheme parity: over the full 2^16-point Q2.13 grid (and the
+    swept Q2.10/Q2.16 grids) the fixed datapath agrees with the
+    qlut+rounded-output float model to <= 1 LSB, and the CR route is
+    BIT-identical to the original Fig. 3 emulation at every paper depth;
+  * analysis: ``tanh_error(datapath='fixed')`` works for all registered
+    schemes and reproduces the paper's headline number (CR depth 64 =
+    one Q2.13 LSB of max error);
+  * engine: every ``<scheme>_fixed`` ActivationConfig impl runs under
+    jit at flagship geometry, differentiates via the straight-through
+    JVP, and honors a swept Q format.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import approximant as apx
+from repro.core import catmull_rom as cr
+from repro.core.activations import (ActivationConfig, ActivationEngine,
+                                    fixed_scheme_of)
+from repro.core.error_analysis import tanh_error
+from repro.core.fixed_point import (GUARD_BITS, Q2_13, QFormat, dequantize,
+                                    fx_mul_shift, quantize,
+                                    representable_grid)
+
+LSB = 2.0 ** -13
+
+# flagship fixed geometries per scheme (jit-clean int32 datapaths)
+FIXED_GEOMS = {
+    "cr_spline": dict(depth=32, degree=3),
+    "pwl": dict(depth=32, degree=3),
+    "poly": dict(depth=8, degree=3),
+    "rational": dict(depth=32, degree=5),
+}
+
+
+def _spec(scheme, fmt=Q2_13, **over):
+    geom = {**FIXED_GEOMS[scheme], **over}
+    return apx.spec_for(scheme, "tanh", depth=geom["depth"],
+                        degree=geom["degree"], int_bits=fmt.int_bits,
+                        frac_bits=fmt.frac_bits)
+
+
+def _fixed_eval(spec, fmt):
+    grid = representable_grid(fmt)
+    xq = quantize(grid, fmt)
+    params_q = jnp.asarray(apx.fixed_params_for(spec, "tanh"))
+    return grid, np.asarray(apx.fixed_block(xq, params_q, spec))
+
+
+def _qlut_rounded(spec, fmt):
+    """The float model the fixed datapath must track: params quantized
+    (guard-bit ROM for MAC-chain schemes via the same convention
+    error_analysis uses), float arithmetic, output rounded to fmt."""
+    grid = representable_grid(fmt)
+    params = apx.params_for(spec, "tanh")
+    cfmt = QFormat(fmt.int_bits, fmt.frac_bits + GUARD_BITS)
+    pq = np.asarray(dequantize(quantize(params.astype(np.float64), cfmt),
+                               cfmt))
+    y = apx.block(jnp.asarray(grid, jnp.float32), jnp.asarray(pq), spec)
+    return np.asarray(quantize(y, fmt))
+
+
+# ---------------------------------------------------------------------------
+# the wide-MAC primitive
+# ---------------------------------------------------------------------------
+
+class TestFxMulShift:
+    @pytest.mark.parametrize("a_bits,b_bits,shift", [
+        (8, 8, 4),          # direct int32 product
+        (15, 15, 13),       # direct, flagship widths
+        (16, 25, 16),       # 2-piece split (poly Horner widths)
+        (16, 16, 10),       # 2-piece split (pwl Q2.16 widths)
+        (26, 24, 19),       # 4-piece (rational chain widths)
+        (21, 16, 19),       # 4-piece, shift < 2S branch
+        (26, 26, 26),       # 4-piece, shift >= 2S branch
+    ])
+    @pytest.mark.parametrize("rounding", ["floor", "nearest"])
+    def test_exact_vs_bignum(self, a_bits, b_bits, shift, rounding):
+        rng = np.random.RandomState(a_bits * 1000 + b_bits + shift)
+        a = rng.randint(-(2 ** a_bits) + 1, 2 ** a_bits, 4096)
+        b = rng.randint(-(2 ** b_bits) + 1, 2 ** b_bits, 4096)
+        got = np.asarray(fx_mul_shift(
+            jnp.asarray(a, jnp.int32), jnp.asarray(b, jnp.int32), shift,
+            rounding=rounding, a_bits=a_bits, b_bits=b_bits))
+        prod = a.astype(object) * b.astype(object)   # Python bignums
+        if rounding == "nearest":
+            prod = prod + (1 << (shift - 1))
+        want = np.array([int(p) >> shift for p in prod])
+        np.testing.assert_array_equal(got.astype(object), want)
+
+    def test_edge_magnitudes_exact(self):
+        # extremes of the declared width, incl. the 2^a_bits-1 corners
+        for a_bits, b_bits, shift in ((16, 25, 16), (26, 24, 19)):
+            vals_a = np.array([2 ** a_bits - 1, -(2 ** a_bits) + 1, 0, 1, -1])
+            vals_b = np.array([2 ** b_bits - 1, -(2 ** b_bits) + 1, 0, 1, -1])
+            aa, bb = np.meshgrid(vals_a, vals_b)
+            got = np.asarray(fx_mul_shift(
+                jnp.asarray(aa.ravel(), jnp.int32),
+                jnp.asarray(bb.ravel(), jnp.int32), shift,
+                rounding="floor", a_bits=a_bits, b_bits=b_bits))
+            want = np.array([int(x) * int(y) >> shift
+                             for x, y in zip(aa.ravel(), bb.ravel())])
+            np.testing.assert_array_equal(got.astype(object), want)
+
+    def test_jit_lowers_all_paths(self):
+        # every lowering is int32-only, so it must compile under jit
+        a = jnp.asarray([12345, -54321], jnp.int32)
+        b = jnp.asarray([987654, -123456], jnp.int32)
+        for a_bits, b_bits, shift in ((8, 8, 4), (16, 25, 16), (26, 24, 19)):
+            jax.jit(lambda x, y: fx_mul_shift(
+                x, y, shift, a_bits=a_bits, b_bits=b_bits))(a, b)
+
+    def test_rejects_products_beyond_57_bits(self):
+        a = jnp.asarray([1], jnp.int32)
+        with pytest.raises(ValueError, match="4-piece"):
+            fx_mul_shift(a, a, 0, a_bits=30, b_bits=30)
+
+
+# ---------------------------------------------------------------------------
+# per-scheme grid parity (the tentpole's acceptance surface)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", sorted(FIXED_GEOMS))
+class TestFixedGridParity:
+    def test_q213_fixed_within_one_lsb_of_qlut(self, scheme):
+        """Full 2^16-point Q2.13 grid: the integer datapath tracks the
+        quantized-LUT float model to at most one output LSB."""
+        spec = _spec(scheme)
+        _, yf = _fixed_eval(spec, Q2_13)
+        yq = _qlut_rounded(spec, Q2_13)
+        gap = np.max(np.abs(yf.astype(np.int64) - yq.astype(np.int64)))
+        assert gap <= 1, (scheme, gap)
+
+    @pytest.mark.parametrize("frac_bits", [10, 16])
+    def test_qformat_sweep_parity(self, scheme, frac_bits):
+        """Q-format as swept geometry: the same <= 1 LSB agreement must
+        hold on the narrower and wider lattices."""
+        fmt = QFormat(2, frac_bits)
+        spec = _spec(scheme, fmt)
+        _, yf = _fixed_eval(spec, fmt)
+        yq = _qlut_rounded(spec, fmt)
+        gap = np.max(np.abs(yf.astype(np.int64) - yq.astype(np.int64)))
+        assert gap <= 1, (scheme, frac_bits, gap)
+
+    def test_fixed_contract_on_lattice(self, scheme):
+        """Hardware-unit contract on the integer lattice: exact odd
+        symmetry, exact saturation beyond the domain, monotone to
+        within one LSB (LUT schemes exactly; MAC-chain rounding may
+        wobble a single LSB, as synthesized units do)."""
+        spec = _spec(scheme)
+        grid, y = _fixed_eval(spec, Q2_13)
+        params_q = jnp.asarray(apx.fixed_params_for(spec, "tanh"))
+        xq = quantize(grid, Q2_13)
+        y_neg = np.asarray(apx.fixed_block(-xq, params_q, spec))
+        np.testing.assert_array_equal(y_neg, -y)
+        sat_q = int(np.round(spec.saturation * Q2_13.scale))
+        assert y[-1] == sat_q or grid[-1] < spec.x_max  # top of lattice
+        assert y[0] == -sat_q                           # min_int saturates
+        assert np.min(np.diff(y)) >= -1, scheme         # grid ascending
+        assert np.max(np.abs(y)) <= sat_q
+
+
+def test_cr_fixed_route_is_bit_identical_to_legacy():
+    """The registry CR route must be indistinguishable from the original
+    Fig. 3 emulation at every paper depth (the hard bit-identity
+    constraint of the generalization)."""
+    grid = representable_grid(Q2_13)
+    xq = quantize(grid, Q2_13)
+    for depth in (8, 16, 32, 64):
+        ftab = cr.build_fixed_table(np.tanh, 4.0, depth, Q2_13)
+        legacy = np.asarray(cr.interpolate_fixed(ftab, xq))
+        spec = apx.spec_for("cr_spline", "tanh", depth=depth)
+        got = np.asarray(apx.fixed_block(
+            xq, jnp.asarray(apx.fixed_params_for(spec, "tanh")), spec))
+        np.testing.assert_array_equal(got, legacy, err_msg=f"depth {depth}")
+        # and the ROM itself is the same integer table
+        np.testing.assert_array_equal(
+            apx.fixed_params_for(spec, "tanh"), np.asarray(ftab.windows_q))
+
+
+# ---------------------------------------------------------------------------
+# analysis surface
+# ---------------------------------------------------------------------------
+
+class TestErrorAnalysisFixed:
+    def test_fixed_datapath_works_for_all_schemes(self):
+        for scheme, geom in FIXED_GEOMS.items():
+            st = tanh_error(scheme, geom["depth"], datapath="fixed",
+                            degree=geom["degree"])
+            assert 0.0 < st.max < 0.03 and 0.0 < st.rms <= st.max, scheme
+
+    def test_cr_depth64_reproduces_paper_headline(self):
+        # paper Table II: max error 0.000122 = one Q2.13 LSB, on the
+        # full bit-accurate circuit
+        st = tanh_error("cr", 64, datapath="fixed")
+        assert abs(st.max - LSB) <= 0.05 * LSB
+        # the cr_spline alias routes identically
+        st2 = tanh_error("cr_spline", 64, datapath="fixed")
+        assert st2.max == st.max and st2.rms == st.rms
+
+    def test_fixed_accepts_swept_qformats(self):
+        # wider lattice -> strictly tighter CR error; narrower -> looser
+        base = tanh_error("cr", 32, datapath="fixed").max
+        lo = tanh_error("cr", 32, datapath="fixed", fmt=QFormat(2, 10)).max
+        hi = tanh_error("cr", 32, datapath="fixed", fmt=QFormat(2, 16)).max
+        assert hi < base < lo
+
+    def test_unknown_scheme_still_rejected(self):
+        with pytest.raises(ValueError, match="registered"):
+            tanh_error("cordic", 32, datapath="fixed")
+
+    def test_non_pow2_geometry_rejected_with_clear_error(self):
+        spec = apx.spec_for("pwl", "tanh", depth=24)
+        with pytest.raises(ValueError, match="power-of-two"):
+            spec.t_bits
+
+
+# ---------------------------------------------------------------------------
+# engine surface
+# ---------------------------------------------------------------------------
+
+class TestEngineFixedImpls:
+    @pytest.mark.parametrize("scheme", sorted(FIXED_GEOMS))
+    def test_scheme_fixed_impl_matches_fixed_block_under_jit(self, scheme):
+        geom = FIXED_GEOMS[scheme]
+        cfg = ActivationConfig(impl=f"{scheme}_fixed", depth=geom["depth"],
+                               degree=geom["degree"])
+        eng = ActivationEngine(cfg)
+        x = jnp.asarray(np.random.RandomState(5).uniform(-6, 6, (257,)),
+                        jnp.float32)
+        y = np.asarray(jax.jit(eng.tanh)(x))
+        spec = _spec(scheme)
+        xq = quantize(x, Q2_13)
+        want = np.asarray(dequantize(apx.fixed_block(
+            xq, jnp.asarray(apx.fixed_params_for(spec, "tanh")), spec),
+            Q2_13))
+        np.testing.assert_array_equal(y, want)
+
+    @pytest.mark.parametrize("scheme", sorted(FIXED_GEOMS))
+    def test_straight_through_grads_flow(self, scheme):
+        geom = FIXED_GEOMS[scheme]
+        eng = ActivationEngine(ActivationConfig(
+            impl=f"{scheme}_fixed", depth=geom["depth"],
+            degree=geom["degree"]))
+        x = jnp.asarray(np.random.RandomState(6).uniform(-2, 2, (64,)),
+                        jnp.float32)
+        g = jax.grad(lambda v: eng.tanh(v).sum())(x)
+        assert bool(jnp.all(jnp.isfinite(g)))
+        assert float(jnp.max(jnp.abs(g))) > 0.5   # ~tanh' near 0
+
+    def test_cr_fixed_alias_equivalence(self):
+        # the alias contract holds at the default Q2.13 AND at swept
+        # Q formats (cr_fixed once silently dropped frac_bits)
+        x = jnp.asarray(np.linspace(-5, 5, 2001), jnp.float32)
+        for fb in (13, 10):
+            legacy = ActivationEngine(ActivationConfig(impl="cr_fixed",
+                                                       frac_bits=fb))
+            generic = ActivationEngine(ActivationConfig(
+                impl="cr_spline_fixed", frac_bits=fb))
+            np.testing.assert_array_equal(np.asarray(legacy.tanh(x)),
+                                          np.asarray(generic.tanh(x)),
+                                          err_msg=f"frac_bits={fb}")
+
+    def test_use_kernel_rejected_for_fixed_impls(self):
+        # no silent jnp fallback under a "kernel" flag
+        for impl in ("pwl_fixed", "cr_fixed"):
+            with pytest.raises(ValueError, match="no Pallas kernel"):
+                ActivationEngine(ActivationConfig(impl=impl,
+                                                  use_kernel=True))
+
+    def test_qformat_threads_through_engine_config(self):
+        x = jnp.asarray(np.linspace(-3, 3, 1001), jnp.float32)
+        exact = np.tanh(np.asarray(x, np.float64))
+        errs = {}
+        for fb in (10, 13, 16):
+            eng = ActivationEngine(ActivationConfig(impl="pwl_fixed",
+                                                    frac_bits=fb))
+            errs[fb] = np.max(np.abs(np.asarray(eng.tanh(x)) - exact))
+        assert errs[16] < errs[10]    # wider lattice -> tighter output
+        assert ActivationConfig(impl="pwl_fixed",
+                                frac_bits=10).tag() == "pwl_fixed-d32-q2.10"
+
+    def test_fixed_scheme_of_mapping(self):
+        assert fixed_scheme_of("cr_fixed") == "cr_spline"
+        assert fixed_scheme_of("pwl_fixed") == "pwl"
+        assert fixed_scheme_of("rational_fixed") == "rational"
+        assert fixed_scheme_of("pwl") is None
+        assert fixed_scheme_of("bogus_fixed") is None
+
+    def test_act_impl_threads_fixed_variant_through_step_builder(self):
+        import dataclasses
+
+        from repro.configs import registry
+        from repro.launch import steps
+        cfg = dataclasses.replace(registry.get("qwen3-0.6b", smoke=True),
+                                  act_impl="pwl_fixed")
+        engine = steps.make_engine(cfg)
+        assert engine.cfg.impl == "pwl_fixed"
+        assert engine.act_impl is None       # not kernelizable: jnp path
+
+
+# ---------------------------------------------------------------------------
+# DSE smoke
+# ---------------------------------------------------------------------------
+
+def test_dse_reduced_sweep_passes_on_fixed_datapath():
+    """The reduced DSE (the CI gate) must PASS on the fixed datapath,
+    cover every scheme, sweep >= 2 Q formats, and pin the flagship CR
+    depth-64 Q2.13 point at one LSB."""
+    from benchmarks.dse import run
+    result = run(verbose=False, reduced=True, reps=1)
+    assert result["status"] == "PASS", result["checks"]
+    rows = result["rows"]
+    assert {r["scheme"] for r in rows} >= set(FIXED_GEOMS)
+    assert len({r["qformat"] for r in rows}) >= 3
+    cr64 = [r for r in rows if r["scheme"] == "cr_spline"
+            and r["depth"] == 64 and r["qformat"] == "Q2.13"]
+    assert cr64 and abs(cr64[0]["max_err"] - LSB) <= 0.05 * LSB

@@ -268,6 +268,68 @@ class TestServeBatchWrapper:
         assert st.decode_tokens_per_s == 0.0
 
 
+class TestDrainTrim:
+    def test_trimmed_drain_token_identical_and_fewer_steps(self):
+        """Capping the final decode chunks at the largest surviving
+        budget must not change a single emitted token (greedy) while
+        running strictly fewer in-jit steps than the untrimmed path."""
+        cfg, params = setup("qwen3-0.6b")
+        prompts = make_prompts(cfg, (9, 14, 20), seed=3)
+        gen, runs = 6, {}
+        for trim in (True, False):
+            eng = ServeEngine(cfg, params, EngineConfig(
+                slots=2, max_prompt_len=32, max_len=32 + gen, chunk=8,
+                trim_drain=trim))
+            for p in prompts:
+                eng.submit(p, max_new=gen)
+            done = eng.run()
+            runs[trim] = ([c.tokens for c in done], eng.stats.decode_steps)
+        assert runs[True][0] == runs[False][0]
+        assert runs[True][1] < runs[False][1], runs
+        # gen 6 after the admission token: no slot ever needs more than
+        # 5 decode steps, so no chunk should exceed that
+        assert runs[True][1] <= 5 * 2
+
+    def test_drain_compiles_at_most_one_extra_chunk_size(self):
+        cfg, params = setup("qwen3-0.6b")
+        gen = 6
+        eng = ServeEngine(cfg, params, EngineConfig(
+            slots=2, max_prompt_len=32, max_len=32 + gen, chunk=8))
+        for p in make_prompts(cfg, (9, 14), seed=4):
+            eng.submit(p, max_new=gen)
+        eng.run()
+        # lockstep budgets: the full chunk plus ONE drain size
+        assert set(eng._decode_fns) == {8, 5}
+
+    def test_untrimmed_config_keeps_single_chunk_size(self):
+        cfg, params = setup("qwen3-0.6b")
+        gen = 6
+        eng = ServeEngine(cfg, params, EngineConfig(
+            slots=2, max_prompt_len=32, max_len=32 + gen, chunk=8,
+            trim_drain=False))
+        for p in make_prompts(cfg, (9, 14), seed=4):
+            eng.submit(p, max_new=gen)
+        eng.run()
+        assert set(eng._decode_fns) == {8}
+
+
+class TestAdmissionStats:
+    def test_insert_dispatch_is_timed(self):
+        """The slot insert is half of admission: it must be timed into
+        EngineStats.insert_s, and admission_tokens_per_s (prefill +
+        insert) must not overstate the prefill-only rate."""
+        cfg, params = setup("qwen3-0.6b")
+        done, eng = serve(cfg, params, make_prompts(cfg, (9, 14), seed=5),
+                          gen=4)
+        assert len(done) == 2
+        assert eng.stats.insert_s > 0.0
+        assert (eng.stats.admission_tokens_per_s
+                < eng.stats.prefill_tokens_per_s)
+        # zero-division guards hold on a fresh stats object
+        from repro.serve.engine import EngineStats
+        assert EngineStats().admission_tokens_per_s == 0.0
+
+
 class TestScheduler:
     def test_bucketing(self):
         assert bucket_len(9, min_bucket=16, max_len=64) == 16
@@ -301,6 +363,32 @@ class TestScheduler:
         assert [r.uid for r in s.next_batch(4, bucket_of)] == [4]
         assert [r.uid for r in s.next_batch(4, bucket_of)] == [5]
         assert s.next_batch(4, bucket_of) == []
+
+    def test_next_batch_full_batch_leaves_tail_untouched(self):
+        """Once the batch is full the scan must STOP: the tail is never
+        popped/re-appended (the old implementation rotated the whole
+        queue through popleft/append on every admission round), and the
+        requests left behind keep exact FIFO order."""
+        calls = []
+
+        def bucket_of(n):
+            calls.append(n)
+            return bucket_len(n, min_bucket=16, max_len=64)
+
+        s = FifoScheduler(4)
+        lens = [9, 30, 12, 14, 40, 10, 11, 13]  # buckets 16/32/16/16/64/16...
+        for i, n in enumerate(lens):
+            s.submit(Request(uid=i, tokens=[0] * n, max_new=2))
+        tail_ids = [id(r) for r in list(s.queue)[4:]]   # uids 4..7
+        batch = s.next_batch(3, bucket_of)
+        assert [r.uid for r in batch] == [0, 2, 3]
+        # uid 1 (bucket 32) was skipped and returns to the FRONT; the
+        # tail beyond the fill point is untouched — same objects, same
+        # order, and never even inspected by bucket_of
+        assert [r.uid for r in s.queue] == [1, 4, 5, 6, 7]
+        assert [id(r) for r in list(s.queue)[1:]] == tail_ids
+        # head + the 4 popped requests = 5 bucket_of calls, not len(queue)
+        assert len(calls) == 5
 
     def test_next_batch_respects_width(self):
         def bucket_of(n):
