@@ -1,0 +1,139 @@
+"""Benchmark regression gate: fresh run vs the committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        BENCH_serve.json fresh_serve.json
+
+CI regenerates each benchmark JSON and compares it against the
+`BENCH_*.json` baseline committed at the repo root; a metric that
+regresses by more than the threshold (default 20%) fails the job.
+
+Only metrics that are stable across machines are gated: ratios measured
+within one run (scan-vs-python decode speedup, paged-vs-slot
+concurrency gain, prefix hit rate) and fully deterministic quantities
+(kernel lowering errors, fixed-datapath approximation errors, gate
+counts). Raw wall-clock numbers are carried in the JSONs for humans but
+deliberately NOT gated — CI machines differ too much run to run. Both
+files must also agree the run PASSed its own internal gates.
+
+The benchmark kind (serve / kernel / dse) is inferred from the JSON's
+shape, so the same entry point gates all three artifacts. A metric
+present only in the fresh run is new coverage and is ignored; a
+baseline metric missing from the fresh run is a coverage loss and
+fails. A missing baseline file passes with a warning (bootstrap: the
+first CI run on a branch that introduces a new benchmark).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _kind(doc: dict) -> str:
+    if "capacity_sweep" in doc:
+        return "serve"
+    if "pareto" in doc:
+        return "dse"
+    if "mlp" in doc:
+        return "kernel"
+    raise SystemExit(f"unrecognized benchmark JSON (keys: {sorted(doc)})")
+
+
+def _metrics(doc: dict) -> dict:
+    """Flatten a benchmark JSON to {metric_name: (value, direction)};
+    direction 'higher'/'lower' says which way is better."""
+    kind = _kind(doc)
+    out = {}
+    if kind == "serve":
+        out["decode_speedup_scan_vs_python"] = (
+            doc["decode_speedup_scan_vs_python"], "higher")
+        out["capacity.concurrency_gain"] = (
+            doc["capacity_sweep"]["concurrency_gain"], "higher")
+        out["prefix.hit_rate"] = (
+            doc["prefix_sweep"]["on"]["prefix_hit_rate"], "higher")
+    elif kind == "kernel":
+        for r in doc["rows"]:
+            key = f"err.{r['kernel']}.{r['scheme']}.{r['lookup']}.{r['shape']}"
+            out[key] = (r["max_abs_err"], "lower")
+        for r in doc["mlp"]:
+            out[f"err.{r['kernel']}.{r['shape']}"] = (r["max_abs_err"],
+                                                      "lower")
+    else:  # dse
+        for r in doc["rows"]:
+            key = f"{r['scheme']}.d{r['depth']}.g{r['degree']}.{r['qformat']}"
+            out[f"max_err.{key}"] = (r["max_err"], "lower")
+            out[f"gates.{key}"] = (r["gates"], "lower")
+    return out
+
+
+def compare(baseline: dict, current: dict, threshold: float) -> list[str]:
+    """Regression messages (empty = gate passes)."""
+    problems = []
+    for doc, name in ((baseline, "baseline"), (current, "current")):
+        if doc.get("status") != "PASS":
+            problems.append(f"{name} run FAILed its own gates "
+                            f"(status={doc.get('status')!r})")
+    base_m, cur_m = _metrics(baseline), _metrics(current)
+    for key, (base, direction) in sorted(base_m.items()):
+        if key not in cur_m:
+            problems.append(f"{key}: present in baseline, missing from "
+                            f"current run (coverage loss)")
+            continue
+        cur = cur_m[key][0]
+        if direction == "higher":
+            floor = base * (1.0 - threshold)
+            if cur < floor:
+                problems.append(f"{key}: {cur:.6g} < {floor:.6g} "
+                                f"(baseline {base:.6g}, -{threshold:.0%})")
+        else:
+            # an exactly-zero baseline (e.g. a bit-exact kernel) must
+            # stay exact — any nonzero error is a real regression
+            ceil = base * (1.0 + threshold) if base else 0.0
+            if cur > ceil:
+                problems.append(f"{key}: {cur:.6g} > {ceil:.6g} "
+                                f"(baseline {base:.6g}, +{threshold:.0%})")
+    return problems
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("baseline", help="committed BENCH_*.json")
+    p.add_argument("current", help="freshly generated benchmark JSON")
+    p.add_argument("--threshold", type=float, default=0.2,
+                   help="fractional regression tolerance (default 0.2)")
+    args = p.parse_args(argv)
+
+    # an absent OR empty baseline is the bootstrap case (CI materializes
+    # it via `git show HEAD:... || true`, which leaves an empty file
+    # when the branch is the one introducing the benchmark)
+    if not os.path.exists(args.baseline) \
+            or os.path.getsize(args.baseline) == 0:
+        print(f"[check_regression] no baseline at {args.baseline} — "
+              f"bootstrap run, nothing to gate")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    kb, kc = _kind(baseline), _kind(current)
+    if kb != kc:
+        print(f"[check_regression] kind mismatch: baseline is {kb}, "
+              f"current is {kc}")
+        return 1
+
+    problems = compare(baseline, current, args.threshold)
+    n = len(_metrics(baseline))
+    if problems:
+        print(f"[check_regression] {kb}: {len(problems)} regression(s) "
+              f"over {n} gated metrics:")
+        for msg in problems:
+            print("  REGRESSION:", msg)
+        return 1
+    print(f"[check_regression] {kb}: {n} gated metrics within "
+          f"{args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -172,7 +172,16 @@ def run(verbose: bool = True) -> dict:
 
 
 if __name__ == "__main__":
+    # --json prints to stdout; --json PATH writes the file (CI baseline)
     as_json = "--json" in sys.argv
-    result = run(verbose=not as_json)
+    json_path = None
     if as_json:
+        i = sys.argv.index("--json")
+        if i + 1 < len(sys.argv) and not sys.argv[i + 1].startswith("-"):
+            json_path = sys.argv[i + 1]
+    result = run(verbose=not as_json or json_path is not None)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2, default=str)
+    elif as_json:
         print(json.dumps(result, indent=2, default=str))

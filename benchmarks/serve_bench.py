@@ -27,6 +27,22 @@ Three measurements on the smoke qwen3 config (CPU; relative numbers):
     to admission batching alone (conservative vs the true PR-2
     baseline, which also synced full-vocab logits per request). The
     PASS criterion is batched p50 queue latency <= serial at each load.
+  * capacity sweep — the legacy per-slot cache vs the page pool at
+    EQUAL cache memory (paged gets exactly the slot engine's rows
+    re-cut into pages, plus the single reserved trash page). The
+    workload's requests each need about half a slot's worth of KV, so
+    the slot engine is capped at `slots` concurrent requests by
+    construction while page-granular admission packs ~2x as many into
+    the same bytes. Peak concurrency is measured from completion
+    admit/finish intervals; the PASS criterion is paged sustaining
+    >= 2x the slot engine's peak concurrent requests.
+  * shared-prefix sweep — every request carries the same page-aligned
+    system prompt with a short distinct tail, served with the prefix
+    cache on vs off (both paged). With it on, waves after the first
+    skip the shared pages at admission (refcounted page sharing, no KV
+    recompute); reports the measured prefix hit rate and p50/p99 queue
+    latency per mode. The PASS criterion is a nonzero hit rate with
+    tokens admitted faster than the cold path per admitted token.
 """
 from __future__ import annotations
 
@@ -108,10 +124,14 @@ def _admission_sweep(cfg, params, seed):
         prompts = _workload(np.random.RandomState(seed + mult), n)
         row = {"offered_requests": n}
         for mode in ("batched", "serial"):
+            # prefix_cache off: warming on the exact measurement workload
+            # would otherwise register every prompt's chain, and the
+            # timed pass would measure prefix reuse (with its own jit
+            # shapes) instead of admission batching
             eng = ServeEngine(cfg, params, EngineConfig(
                 slots=SLOTS, max_prompt_len=MAX_PROMPT,
                 max_len=MAX_PROMPT + GEN, chunk=8, seed=seed,
-                admission=mode))
+                admission=mode, prefix_cache=False))
             _engine_pass(eng, prompts, GEN)              # warm
             st, done, wall = _engine_pass(eng, prompts, GEN)
             q = np.asarray(sorted(c.queue_s for c in done))
@@ -131,6 +151,94 @@ def _admission_sweep(cfg, params, seed):
     return rows
 
 
+def _peak_concurrency(done):
+    """Max number of requests simultaneously in flight, from completion
+    admit/finish intervals."""
+    events = []
+    for c in done:
+        events.append((c.admitted_at, 1))
+        events.append((c.finished_at, -1))
+    peak = cur = 0
+    for _, d in sorted(events):
+        cur += d
+        peak = max(peak, cur)
+    return peak
+
+
+def _capacity_sweep(cfg, params, seed):
+    """Slot vs paged at equal cache memory. Both engines get the same
+    KV bytes: `SLOTS` full-length rings, the paged engine's re-cut into
+    pages (n_pages = SLOTS * pages_per_slot + trash). Requests sized at
+    ~half a ring mean the slot engine idles half its cache while capped
+    at SLOTS concurrent; paged admission packs by actual page need."""
+    ps = 16
+    max_len = MAX_PROMPT + GEN
+    n_per_slot = M.pages_per_slot(cfg, max_len, ps)
+    rng = np.random.RandomState(seed + 11)
+    # lens 9..16 all land in bucket 16; L + GEN <= 32 => 2 pages worst
+    n = SLOTS * 4
+    prompts = [rng.randint(0, 512, (int(L),)).astype(np.int32)
+               for L in rng.randint(9, 17, size=n)]
+    out = {"page_size": ps, "pages_per_slot": n_per_slot,
+           "equal_memory_pages": SLOTS * n_per_slot,
+           "offered_requests": n}
+    for mode in ("slot", "paged"):
+        eng = ServeEngine(cfg, params, EngineConfig(
+            slots=SLOTS if mode == "slot" else n,
+            max_prompt_len=MAX_PROMPT, max_len=max_len, chunk=8,
+            seed=seed, cache=mode, page_size=ps,
+            n_pages=SLOTS * n_per_slot + 1, prefix_cache=False))
+        _engine_pass(eng, prompts, GEN)                  # warm
+        st, done, wall = _engine_pass(eng, prompts, GEN)
+        lat = np.asarray(sorted(c.latency_s for c in done))
+        out[mode] = {
+            "wall_s": wall,
+            "peak_concurrent": _peak_concurrency(done),
+            "decode_tokens_per_s": st.decode_tokens_per_s,
+            "pages_peak": st.pages_peak,
+            "p50_latency_s": float(np.percentile(lat, 50)),
+            "p99_latency_s": float(np.percentile(lat, 99)),
+        }
+    out["concurrency_gain"] = (out["paged"]["peak_concurrent"]
+                               / max(out["slot"]["peak_concurrent"], 1))
+    return out
+
+
+def _prefix_sweep(cfg, params, seed):
+    """Shared-system-prompt workload, prefix cache on vs off (paged
+    both ways). 32 shared tokens = 2 pages at ps=16; tails keep every
+    suffix in the smallest bucket so the on-path prefills 16 padded
+    tokens per warm request instead of 48."""
+    ps = 16
+    rng = np.random.RandomState(seed + 23)
+    shared = rng.randint(0, 512, (2 * ps,)).astype(np.int32)
+    n = SLOTS * 4
+    prompts = [np.concatenate([
+        shared, rng.randint(0, 512, (int(t),)).astype(np.int32)])
+        for t in rng.randint(5, 16, size=n)]
+    out = {"page_size": ps, "shared_tokens": 2 * ps,
+           "offered_requests": n}
+    for mode in ("off", "on"):
+        eng = ServeEngine(cfg, params, EngineConfig(
+            slots=SLOTS, max_prompt_len=MAX_PROMPT, max_len=MAX_PROMPT + GEN,
+            chunk=8, seed=seed, cache="paged", page_size=ps,
+            prefix_cache=(mode == "on")))
+        _engine_pass(eng, prompts, GEN)                  # warm
+        st, done, wall = _engine_pass(eng, prompts, GEN)
+        q = np.asarray(sorted(c.queue_s for c in done))
+        out[mode] = {
+            "wall_s": wall,
+            "prefill_tokens": st.prefill_tokens,
+            "prefix_hit_tokens": st.prefix_hit_tokens,
+            "prefix_hit_rate": st.prefix_hit_rate,
+            "admitted_tokens_per_s": st.admitted_tokens_per_s,
+            "pages_peak": st.pages_peak,
+            "p50_queue_s": float(np.percentile(q, 50)),
+            "p99_queue_s": float(np.percentile(q, 99)),
+        }
+    return out
+
+
 def run(verbose: bool = True, json_path: str | None = None,
         arch: str = "qwen3-0.6b", seed: int = 0) -> dict:
     cfg = registry.get(arch, smoke=True)
@@ -140,9 +248,12 @@ def run(verbose: bool = True, json_path: str | None = None,
         if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
     rng = np.random.RandomState(seed)
 
+    # prefix_cache off for the decode/offered-load measurements: they
+    # feed fresh random prompts per pass, so chains parked by earlier
+    # passes could only perturb timings, never hit
     engine = ServeEngine(cfg, params, EngineConfig(
         slots=SLOTS, max_prompt_len=MAX_PROMPT, max_len=MAX_PROMPT + GEN,
-        chunk=8, seed=seed))
+        chunk=8, seed=seed, prefix_cache=False))
     # warm every prefill bucket deterministically — lengths 8/32/47 hit
     # buckets 16/32/48 — plus the decode scan and the slot insert, so no
     # compile lands inside a timed region regardless of --seed
@@ -194,6 +305,16 @@ def run(verbose: bool = True, json_path: str | None = None,
         row["batched"]["p50_queue_s"] <= row["serial"]["p50_queue_s"]
         for row in admission)
 
+    # -- paged vs slot at equal cache memory -----------------------------
+    capacity = _capacity_sweep(cfg, params, seed)
+    capacity_ok = capacity["concurrency_gain"] >= 2.0
+
+    # -- shared-system-prompt prefix reuse -------------------------------
+    prefix = _prefix_sweep(cfg, params, seed)
+    prefix_ok = (prefix["on"]["prefix_hit_rate"] > 0.0
+                 and prefix["on"]["admitted_tokens_per_s"]
+                 > prefix["off"]["admitted_tokens_per_s"])
+
     result = {
         "arch": cfg.name,
         "slots": SLOTS,
@@ -204,7 +325,10 @@ def run(verbose: bool = True, json_path: str | None = None,
         "decode_speedup_scan_vs_python": speedup,
         "offered_load_sweep": loads,
         "admission_sweep": admission,
-        "status": "PASS" if (speedup > 1.0 and admission_ok) else "FAIL",
+        "capacity_sweep": capacity,
+        "prefix_sweep": prefix,
+        "status": "PASS" if (speedup > 1.0 and admission_ok
+                             and capacity_ok and prefix_ok) else "FAIL",
     }
     if verbose:
         print(f"== serve_bench ({cfg.name}, {SLOTS} slots, gen {GEN}) ==")
@@ -230,6 +354,19 @@ def run(verbose: bool = True, json_path: str | None = None,
                   f"({s['prefill_batches']}); p99 "
                   f"{b['p99_queue_s']*1e3:6.0f} vs "
                   f"{s['p99_queue_s']*1e3:6.0f} ms")
+        cs, cp = capacity["slot"], capacity["paged"]
+        print(f"capacity ({capacity['equal_memory_pages']} pages both): "
+              f"slot {cs['peak_concurrent']} concurrent / "
+              f"{cs['wall_s']*1e3:.0f} ms, paged {cp['peak_concurrent']} "
+              f"concurrent / {cp['wall_s']*1e3:.0f} ms "
+              f"({capacity['concurrency_gain']:.1f}x, "
+              f"pages_peak {cp['pages_peak']})")
+        po, pn = prefix["off"], prefix["on"]
+        print(f"prefix    ({prefix['shared_tokens']} shared tokens): "
+              f"hit rate {pn['prefix_hit_rate']:.2f}, admitted "
+              f"{pn['admitted_tokens_per_s']:.0f} tok/s vs "
+              f"{po['admitted_tokens_per_s']:.0f} cold; queue p50 "
+              f"{pn['p50_queue_s']*1e3:.0f} vs {po['p50_queue_s']*1e3:.0f} ms")
         print(f"status: {result['status']}")
     if json_path:
         with open(json_path, "w") as f:

@@ -411,10 +411,9 @@ class CRSpline(Approximant):
         # the authoritative CR integer datapath is
         # catmull_rom.interpolate_fixed; adapt it to the registry API
         # (same index geometry: FixedTable.t_bits == spec.t_bits).
-        # Note the inherited wide-lattice caveat: geometries with
-        # t_bits > 10 (depth 8/16 at Q2.13, any depth <= 32 at Q2.16)
-        # take basis_weights_fixed's int64 fallback, which is for plain
-        # traces only — flagship shapes are int32 and fully jit-able.
+        # Wide geometries (t_bits > 10: depth 8/16 at Q2.13, any depth
+        # <= 64 at Q2.16) run the exact int32 limb MAC — every depth
+        # is jit/TPU-legal, no int64 anywhere.
         ftab = cr.FixedTable(spec.qformat, spec.x_max, spec.depth,
                              spec.t_bits, params_q, _sat_q(spec))
         return cr.interpolate_fixed(ftab, vq)

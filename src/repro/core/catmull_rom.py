@@ -24,7 +24,7 @@ from typing import Callable, NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
-from .fixed_point import QFormat, Q2_13, fx_dot4, quantize
+from .fixed_point import LimbStack, QFormat, Q2_13, fx_dot4, quantize
 
 # Rows act on [P_{k-1}, P_k, P_{k+1}, P_{k+2}]; columns are t^3, t^2, t, 1.
 # f(t) = 0.5 * P . (BASIS @ [t^3, t^2, t, 1])
@@ -176,25 +176,16 @@ def basis_weights_fixed(t_q, ftab: FixedTable):
     TPU vector lanes nor lowers reliably inside remat'd scans on CPU
     (jax re-lowers jax.checkpoint constants under the ambient 32-bit
     config, emitting invalid mixed i64/i32 ops).
+
+    Wide geometries (t_bits > 10: depth 8/16 at Q2.13, depth <= 64 at
+    Q2.16) exceed 32 lattice bits, so the basis comes back as a
+    ``LimbStack`` of radix-2^s int32 limbs computed exactly with limb
+    arithmetic (``_wide_basis_limbs``); fx_dot4 dots the limbs
+    separately. Every depth is int32-only and jit/TPU-legal.
     """
     tb = ftab.t_bits
     if 3 * tb + 1 > 31:
-        # wide lattice (depth-8/16 tables at Q2.13: tb = 11/12): the true
-        # basis values exceed 32 bits, so fall back to an int64 lattice
-        # under a local x64 override. Works in plain/jit traces (the
-        # error-analysis sweeps) but NOT inside jax.checkpoint-remat'd
-        # scans, where jax re-lowers constants under the ambient 32-bit
-        # config — model hot paths use the flagship tb=10 int32 datapath.
-        from jax.experimental import enable_x64
-        with enable_x64(True):
-            T = t_q.astype(jnp.int64)
-            T2 = T * T
-            T3 = T2 * T
-            w0 = -T3 + 2 * (T2 << tb) - (T << (2 * tb))
-            w1 = 3 * T3 - 5 * (T2 << tb) + (2 << (3 * tb))
-            w2 = -3 * T3 + 4 * (T2 << tb) + (T << (2 * tb))
-            w3 = T3 - (T2 << tb)
-            return jnp.stack([w0, w1, w2, w3], axis=-1)
+        return _wide_basis_limbs(t_q, tb)
     T = t_q.astype(jnp.int32)                 # t * 2^tb, exact
     T2 = T * T                                # t^2 * 2^2tb, exact
     T3 = T2 * T                               # t^3 * 2^3tb, exact
@@ -205,6 +196,64 @@ def basis_weights_fixed(t_q, ftab: FixedTable):
     w2 = -3 * T3 + 4 * (T2 << tb) + (T << (2 * tb))
     w3 = T3 - (T2 << tb)
     return jnp.stack([w0, w1, w2, w3], axis=-1)
+
+
+# Limb width for wide basis lattices. 10 bits keeps every partial dot in
+# fx_dot4 exact on int32 lanes for formats up to Q2.18 (int+frac+s+2 <= 31)
+# and every limb product here below 2^(s + t_bits) <= 2^25.
+WIDE_LIMB_BITS = 10
+
+
+def _wide_basis_limbs(t_q, tb: int, s: int = WIDE_LIMB_BITS) -> LimbStack:
+    """Exact CR basis on a lattice wider than 31 bits, as radix-2^s limbs.
+
+    The four basis values are integer combinations of T^3, T^2*2^tb,
+    T*2^2tb and the constant 2^(3tb+1), all aligned at 3*tb fractional
+    bits (times the folded CR 1/2). T < 2^tb with tb <= 15, so T^2 is
+    int32-exact but T^3 (up to 3*tb = 45 bits) is not: T^3 is formed by
+    limb-splitting T^2 and multiplying each limb by T (products below
+    2^(s+tb) <= 2^25), and the shifted terms land piece-aligned via
+    divmod(shift, s). Per-limb accumulators stay far below 2^31 (integer
+    coefficients <= 5 on pieces < 2^25), and one signed carry-normalize
+    pass produces canonical limbs: 0..m-2 in [0, 2^s), top signed.
+    Everything is exact integer arithmetic — no wraparound, no int64.
+    """
+    S = 3 * tb + 1                    # total lattice shift (incl. CR 1/2)
+    m = -(-(S + 1) // s)              # limbs covering S+1 magnitude bits
+    mask = (1 << s) - 1
+    T = t_q.astype(jnp.int32)         # t * 2^tb, exact
+    T2 = T * T                        # t^2 * 2^2tb, exact (2*tb <= 30)
+    t2 = [(T2 >> (k * s)) & mask for k in range(-(-2 * tb // s))]
+    t1 = [(T >> (k * s)) & mask for k in range(-(-tb // s))]
+    zero = jnp.zeros_like(T)
+    q2, r2 = divmod(tb, s)            # T^2 << tb placement
+    q1, r1 = divmod(2 * tb, s)        # T << 2tb placement
+    qc, rc = divmod(S, s)             # constant 2^(3tb+1) placement
+
+    def combine(c3: int, c2: int, c1: int, const: bool):
+        acc = [zero] * m
+        for k, piece in enumerate(t2):
+            acc[k] = acc[k] + c3 * (piece * T)          # T^3 pieces
+            acc[k + q2] = acc[k + q2] + c2 * (piece << r2)   # T^2 << tb
+        if c1:
+            for k, piece in enumerate(t1):
+                acc[k + q1] = acc[k + q1] + c1 * (piece << r1)  # T << 2tb
+        if const:
+            acc[qc] = acc[qc] + (1 << rc)
+        out, carry = [], zero
+        for k in range(m - 1):
+            v = acc[k] + carry
+            out.append(v & mask)
+            carry = v >> s            # arithmetic: exact floor
+        out.append(acc[m - 1] + carry)
+        return out
+
+    ws = [combine(-1, 2, -1, False),      # w0 = -T3 + 2 T2<<tb - T<<2tb
+          combine(3, -5, 0, True),        # w1 = 3 T3 - 5 T2<<tb + 2^(3tb+1)
+          combine(-3, 4, 1, False),       # w2 = -3 T3 + 4 T2<<tb + T<<2tb
+          combine(1, -1, 0, False)]       # w3 = T3 - T2<<tb
+    limbs = tuple(jnp.stack([w[k] for w in ws], axis=-1) for k in range(m))
+    return LimbStack(s, limbs)
 
 
 def interpolate_fixed(ftab: FixedTable, x_q):

@@ -12,6 +12,7 @@ These helpers are pure jnp and usable inside jit / Pallas (interpret).
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -182,6 +183,22 @@ def fx_mul_shift(a, b, shift: int, *, rounding: str = "floor",
     return (t2 << (2 * S - shift)) + (rem >> shift)
 
 
+class LimbStack(NamedTuple):
+    """A wide integer lattice value as radix-2^s limbs on int32 lanes.
+
+    ``limbs[k]`` carries bits [k*s, (k+1)*s) of the represented value
+    (little-endian): limbs 0..m-2 are non-negative residues in
+    [0, 2^s), the top limb is signed and carries the sign. The
+    represented value is sum_k limbs[k] * 2^(k*s) — exact, no int64
+    anywhere. This is how basis_weights_fixed hands fx_dot4 a basis
+    lattice wider than 31 bits (t_bits > 10 geometries): the MAC dots
+    each limb separately and reassembles with progressive carries,
+    the same partial-product pipeline a synthesized wide MAC uses.
+    """
+    s: int          # limb width in bits
+    limbs: tuple    # m int32 arrays [..., 4], least-significant first
+
+
 def fx_dot4(p, c, fmt: QFormat = Q2_13, rounding: str = "nearest",
             extra_shift: int = 0):
     """4-tap MAC: sum_i p[i]*c[i] with a wide accumulator, emulated
@@ -204,19 +221,42 @@ def fx_dot4(p, c, fmt: QFormat = Q2_13, rounding: str = "nearest",
     Exact when |p| < 2^15 and every piece product fits 31 bits
     (|p|·2^max(s, 32-2s) < 2^29); both hold for every Q-format and
     basis-lattice width this repo builds (see basis_weights_fixed).
+
+    ``c`` may instead be a ``LimbStack`` (pre-split limbs from a wide
+    basis lattice, t_bits > 10): each limb is dotted separately and the
+    partial sums carry-propagate before the single output shift-round —
+    exact whenever 4*|p|_max*2^s fits 31 bits, i.e.
+    int_bits + frac_bits + s + 2 <= 31 (checked).
     """
     S = fmt.frac_bits + extra_shift
     if S < 3:
         raise ValueError(f"fx_dot4 output shift {S} too small to split")
-    if c.dtype == jnp.int64:
-        # wide-lattice fallback (basis_weights_fixed, t_bits > 10): plain
-        # int64 MAC under the caller's x64 override
-        from jax.experimental import enable_x64
-        with enable_x64(True):
-            acc = jnp.sum(p.astype(jnp.int64) * c, axis=-1)
-            if rounding == "nearest":
-                acc = acc + (1 << (S - 1))
-            return sat((acc >> S).astype(jnp.int32), fmt)
+    if isinstance(c, LimbStack):
+        s, limbs = c.s, c.limbs
+        m = len(limbs)
+        p_bits = fmt.int_bits + fmt.frac_bits
+        if p_bits + s + 2 > 31:
+            raise ValueError(
+                f"fx_dot4 limb dot overflows int32: |p| <= 2^{p_bits} "
+                f"times 2^{s}-wide limbs, 4 taps needs "
+                f"{p_bits + s + 2} <= 31 bits")
+        if S < (m - 1) * s:
+            raise ValueError(
+                f"fx_dot4 output shift {S} below the top-limb offset "
+                f"{(m - 1) * s}")
+        mask = (1 << s) - 1
+        p32 = p.astype(jnp.int32)
+        accs = [jnp.sum(p32 * limb, axis=-1) for limb in limbs]
+        if rounding == "nearest":
+            # fold 2^(S-1) into the accumulators limb-aligned (S-1 is
+            # below m*s by construction, so the decomposition is exact)
+            r = 1 << (S - 1)
+            accs = [a + ((r >> (k * s)) & mask) for k, a in enumerate(accs[:-1])] \
+                + [accs[-1] + (r >> ((m - 1) * s))]
+        carry = accs[0]
+        for a in accs[1:]:
+            carry = a + (carry >> s)
+        return sat(carry >> (S - (m - 1) * s), fmt)
     s = S // 3                       # piece width; S >= 3s >= 2s + 1
     mask = (1 << s) - 1
     p32 = p.astype(jnp.int32)

@@ -125,7 +125,8 @@ def serve_batch(cfg, params, prompts, gen_tokens: int, *,
                 capacity: int | None = None, backend: str = "engine",
                 slots: int | None = None, chunk: int = 8,
                 eos_id: int | None = None, mesh=None,
-                rules: dict | None = None):
+                rules: dict | None = None, cache: str = "paged",
+                page_size: int = 16, prefix_cache: bool = True):
     """prompts: int32 [B, S(, K)]. Returns (tokens [B, gen(, K)], stats).
 
     backend "engine": continuous-batching ServeEngine (batched-bucket
@@ -154,7 +155,8 @@ def serve_batch(cfg, params, prompts, gen_tokens: int, *,
     ecfg = EngineConfig(slots=slots or B, max_prompt_len=S,
                         max_len=S + gen_tokens,
                         chunk=max(1, min(chunk, gen_tokens - 1) or 1),
-                        seed=seed)
+                        cache=cache, page_size=page_size,
+                        prefix_cache=prefix_cache, seed=seed)
     engine = ServeEngine(cfg, params, ecfg, mesh=mesh, rules=rules)
     for b in range(B):
         engine.submit(np.asarray(prompts[b]), gen_tokens,
@@ -195,6 +197,13 @@ def main(argv=None):
                    help="in-jit decode steps per dispatch (engine backend)")
     p.add_argument("--eos-id", type=int, default=None,
                    help="stop rows early on this token id")
+    p.add_argument("--cache", choices=("paged", "slot"), default="paged",
+                   help="KV cache contract: shared page pool (default) "
+                        "or the legacy per-slot rings")
+    p.add_argument("--page-size", type=int, default=16,
+                   help="tokens per KV page (--cache paged)")
+    p.add_argument("--no-prefix-cache", action="store_true",
+                   help="disable prefix page sharing (--cache paged)")
     p.add_argument("--json", default=None, help="write stats JSON here")
     args = p.parse_args(argv)
 

@@ -185,20 +185,30 @@ def axes_shardings(axes_tree, shapes_tree, mesh, rules):
 
 
 def serve_shardings(cfg: ModelConfig, slots: int, seq_len: int, mesh,
-                    rules: dict | None = None):
+                    rules: dict | None = None, *,
+                    page_size: int | None = None,
+                    n_pages: int | None = None):
     """(params, cache, replicated) NamedShardings for the serve engine's
-    jitted datapath: params by their logical axes, the per-slot cache by
-    `models/model.py::cache_axes(per_slot=True)` — the same machinery the
-    dry-run and train paths resolve shardings with. Everything else in
-    the engine (token blocks, slot-state vectors, PRNG keys) is
-    replicated: those are host-scheduled per-row values, tiny next to the
-    weights/cache, and replication keeps slot scatter/gather local."""
+    jitted datapath: params by their logical axes, the cache by
+    `models/model.py::cache_axes(per_slot=True)` — or, with
+    ``page_size``/``n_pages``, by the paged contract's
+    `paged_cache_axes` (pool page dim host-addressed like slots, heads
+    TP-sharded identically, so paged TP serving stays token-identical) —
+    the same machinery the dry-run and train paths resolve shardings
+    with. Everything else in the engine (token blocks, slot-state
+    vectors, PRNG keys, page tables) is replicated: those are
+    host-scheduled per-row values, tiny next to the weights/cache, and
+    replication keeps slot scatter/gather local."""
     rules = rules or part.serve_rules()
     pshapes, paxes = M.abstract_params(cfg)
     psharding = axes_shardings(paxes, pshapes, mesh, rules)
-    cspec = M.cache_spec(cfg, slots, seq_len, per_slot=True)
-    csharding = axes_shardings(M.cache_axes(cfg, per_slot=True), cspec,
-                               mesh, rules)
+    if page_size is not None:
+        cspec = M.paged_cache_spec(cfg, slots, n_pages, page_size, seq_len)
+        caxes = M.paged_cache_axes(cfg)
+    else:
+        cspec = M.cache_spec(cfg, slots, seq_len, per_slot=True)
+        caxes = M.cache_axes(cfg, per_slot=True)
+    csharding = axes_shardings(caxes, cspec, mesh, rules)
     replicated = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     return psharding, csharding, replicated
 

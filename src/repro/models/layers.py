@@ -643,17 +643,45 @@ def _attn_branch(p, xn, io: BlockIO, cfg: ModelConfig, engine):
     new_cache = {}
     if io.mode == "decode":
         q, k_new, v_new = _qkv(p, xn, io.positions, cfg)
-        kc, vc = io.cache["k"], io.cache["v"]                  # [B, W, KV, hd]
-        B = kc.shape[0]
-        slot = io.cache["slot"]                                # [B] int32
-        rows = jnp.arange(B)
-        kc = kc.at[rows, slot].set(k_new[:, 0])
-        vc = vc.at[rows, slot].set(v_new[:, 0])
-        ctx = decode_attention(q, kc, vc, io.q_pos, io.k_pos, cfg, engine)
+        if "page_tbl" in io.cache:
+            # paged contract: k/v are a shared page pool [P, ps, KV, hd];
+            # the row's ring is reassembled by gathering its page table.
+            # Writes from dead/unallocated rows land on the trash page
+            # (page 0) and are masked out via k_pos == -1.
+            kc, vc = io.cache["k"], io.cache["v"]
+            page, off = io.cache["page"], io.cache["off"]      # [B] int32
+            tbl = io.cache["page_tbl"]                         # [B, n]
+            kc = kc.at[page, off].set(k_new[:, 0])
+            vc = vc.at[page, off].set(v_new[:, 0])
+            B, n = tbl.shape
+            ring = (B, n * kc.shape[1]) + kc.shape[2:]         # [B, W, KV, hd]
+            ctx = decode_attention(q, kc[tbl].reshape(ring),
+                                   vc[tbl].reshape(ring),
+                                   io.q_pos, io.k_pos, cfg, engine)
+        else:
+            kc, vc = io.cache["k"], io.cache["v"]              # [B, W, KV, hd]
+            B = kc.shape[0]
+            slot = io.cache["slot"]                            # [B] int32
+            rows = jnp.arange(B)
+            kc = kc.at[rows, slot].set(k_new[:, 0])
+            vc = vc.at[rows, slot].set(v_new[:, 0])
+            ctx = decode_attention(q, kc, vc, io.q_pos, io.k_pos, cfg, engine)
         new_cache = {"k": kc, "v": vc}
     else:
         q, k, v = _qkv(p, xn, io.positions, cfg)
-        ctx = flash_attention(q, k, v, io.q_pos, io.k_pos, cfg, engine)
+        if io.cache is not None and "k_pre" in io.cache:
+            # prefix-cached prefill: suffix queries attend over the
+            # shared prefix k/v (gathered from the page pool, identical
+            # for every row) followed by this row's own suffix keys.
+            kp, vp = io.cache["k_pre"], io.cache["v_pre"]      # [Lp, KV, hd]
+            B = k.shape[0]
+            full = lambda pre, own: jnp.concatenate(
+                [jnp.broadcast_to(pre[None].astype(own.dtype),
+                                  (B,) + pre.shape), own], axis=1)
+            ctx = flash_attention(q, full(kp, k), full(vp, v),
+                                  io.q_pos, io.k_pos, cfg, engine)
+        else:
+            ctx = flash_attention(q, k, v, io.q_pos, io.k_pos, cfg, engine)
         if io.mode == "prefill":
             new_cache = {"k": k, "v": v}
     return attention_out(p, ctx, cfg), new_cache

@@ -230,6 +230,49 @@ def _prefill_slot_positions_ragged(capacity: int, lengths):
     return jnp.where(valid, p, -1)
 
 
+def run_stack_prefill_prefix(params, x, batch, cfg: ModelConfig, engine,
+                             prefix_kv, prefix_len: int, capacity: int,
+                             page_size: int, lengths):
+    """Ragged prefill of prompt *suffixes* against an already-cached,
+    page-aligned shared prefix (prefix caching, attention-only archs).
+
+    `x` embeds the suffix tokens (right-padded to S); `prefix_kv` is the
+    per-layer prefix k/v gathered from the page pool ({"k"/"v"}:
+    [L, prefix_len, KV, hd], shared by every row). Each layer attends
+    suffix queries over [prefix ++ suffix] keys — causal masking makes
+    the row's pad keys invisible exactly as in the cold ragged path — and
+    returns the suffix k/v padded to whole pages, in sequence order
+    (suffix page j holds positions prefix_len + [j*ps, (j+1)*ps)).
+    Requires no sliding window, so ring order == sequence order and the
+    returned `cur`/`k_pos` cover positions [0, prefix_len + len_b)."""
+    B, S = x.shape[0], x.shape[1]
+    io_template = dict(
+        positions=_positions_for(batch, cfg, S, offset=prefix_len),
+        q_pos=prefix_len + jnp.arange(S, dtype=jnp.int32),
+        k_pos=jnp.arange(prefix_len + S, dtype=jnp.int32),
+    )
+    pad = (-S) % page_size
+
+    def scan_body(x, inp):
+        layer_params, pre = inp
+        io = BlockIO(mode="prefill",
+                     cache={"k_pre": pre["k"], "v_pre": pre["v"]},
+                     **io_template)
+        x, cache, _ = apply_block(layer_params, x, io, cfg, engine)
+        out = {}
+        for name in ("k", "v"):
+            kv = cache[name]
+            out[name] = jnp.pad(kv, ((0, 0), (0, pad), (0, 0), (0, 0))) \
+                if pad else kv
+        return x, out
+
+    x, caches = jax.lax.scan(scan_body, x, (params["blocks"], prefix_kv))
+    total = prefix_len + lengths.astype(jnp.int32)          # [B]
+    j = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+    k_pos = jnp.where(j < total[:, None], j, -1)
+    return x, {"layers": caches, "cur": total, "k_pos": k_pos}
+
+
 def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
     """One-token step. x: [B,1,d]. Returns (x, new_cache).
 
@@ -237,7 +280,18 @@ def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
     at the same position) or int32 [B] (per-slot — continuous batching,
     each row independent); `k_pos` correspondingly [W] or [B, W]. The
     returned cache preserves the structure it was given, so jit-donated
-    serving loops stay shape-stable."""
+    serving loops stay shape-stable.
+
+    Paged contract: when the cache carries a `page_tbl` ([B, n] physical
+    page ids per logical page), `layers.k/v` are a shared page pool
+    [L, n_pages, page_size, KV, hd] instead of per-slot rows. The ring
+    semantics are unchanged — logical ring slot `cur % W` lives at
+    physical page `page_tbl[b, slot // page_size]`, offset
+    `slot % page_size` — so decode scatters one token through the table
+    and gathers the row's W keys back out, all with traced indices (no
+    host sync). Physical page 0 is the trash page: dead/unallocated
+    logical pages map there, their writes are discarded by construction
+    and their keys are masked (k_pos == -1)."""
     B = x.shape[0]
     cur = cache["cur"]
     per_slot = jnp.ndim(cur) > 0
@@ -245,6 +299,11 @@ def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
     k_pos_vec = cache.get("k_pos")
     W = k_pos_vec.shape[-1] if k_pos_vec is not None else 0
     slot = (cur_b % W).astype(jnp.int32) if W else jnp.zeros((B,), jnp.int32)
+    tbl = cache.get("page_tbl")
+    if tbl is not None:
+        ps = cache["layers"]["k"].shape[2]                 # [L,P,ps,KV,hd]
+        page = jnp.take_along_axis(tbl, (slot // ps)[:, None], axis=1)[:, 0]
+        off = slot % ps
 
     if cfg.rope_kind == "mrope" and "mrope_positions" in batch:
         positions = batch["mrope_positions"]
@@ -266,7 +325,10 @@ def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
     def scan_body(x, inp):
         layer_params, layer_cache = inp
         lcache = dict(layer_cache)
-        lcache["slot"] = slot
+        if tbl is not None:
+            lcache["page"], lcache["off"], lcache["page_tbl"] = page, off, tbl
+        else:
+            lcache["slot"] = slot
         io = BlockIO(mode="decode", positions=positions, q_pos=cur_b,
                      k_pos=k_pos_new, cache=lcache)
         x, new_cache, _ = apply_block(layer_params, x, io, cfg, engine)
@@ -280,6 +342,8 @@ def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
     if k_pos_new is not None:
         new_cache["k_pos"] = k_pos_new if (per_slot or k_pos_vec.ndim == 2) \
             else k_pos_new[0]
+    if tbl is not None:
+        new_cache["page_tbl"] = tbl
     return x, new_cache
 
 
@@ -349,6 +413,70 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
 
 
 # ---------------------------------------------------------------------------
+# paged cache (page-pool contract; serve/engine.py cache="paged")
+# ---------------------------------------------------------------------------
+
+def pages_per_slot(cfg: ModelConfig, seq_len: int, page_size: int) -> int:
+    """Logical pages per decode slot: the ring capacity rounded up to
+    whole pages. The paged ring width is pages_per_slot * page_size —
+    padding the ring is semantically free because attention validity is
+    mask-driven (k_pos), not width-driven."""
+    return -(-cache_capacity(cfg, seq_len) // page_size)
+
+
+def paged_cache_spec(cfg: ModelConfig, slots: int, n_pages: int,
+                     page_size: int, seq_len: int, dtype=None):
+    """ShapeDtypeStruct tree for the paged serve cache: one shared k/v
+    page pool [L, n_pages, page_size, KV, hd] per layer plus per-slot
+    page tables [slots, pages_per_slot] mapping logical ring pages to
+    pool pages. SSM/conv states (hybrid archs) stay per-slot — they are
+    O(1) per row, paging them buys nothing."""
+    if not (cfg.has_attention or cfg.parallel_mamba):
+        raise ValueError(f"{cfg.name}: paged cache requires a KV ring "
+                         "(pure-SSM stacks have nothing to page)")
+    cdt = dtype or jnp.dtype(cfg.compute_dtype)
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim_
+    n_slot = pages_per_slot(cfg, seq_len, page_size)
+    sds = jax.ShapeDtypeStruct
+    layers: dict[str, Any] = {
+        "k": sds((L, n_pages, page_size, KV, hd), cdt),
+        "v": sds((L, n_pages, page_size, KV, hd), cdt),
+    }
+    if cfg.use_mamba or cfg.parallel_mamba:
+        layers["conv"] = sds((L, slots, cfg.conv_kernel - 1, cfg.d_inner_), cdt)
+        layers["ssm"] = sds((L, slots, cfg.d_inner_, cfg.ssm_state), jnp.float32)
+    return {"layers": layers,
+            "cur": sds((slots,), jnp.int32),
+            "k_pos": sds((slots, n_slot * page_size), jnp.int32),
+            "page_tbl": sds((slots, n_slot), jnp.int32)}
+
+
+def paged_cache_axes(cfg: ModelConfig):
+    """Logical axes tree matching paged_cache_spec. The pool dim is
+    "pages" (host-addressed like decode slots — see serve_rules), the
+    in-page dim is plain sequence; heads shard exactly as per-slot k/v."""
+    layers: dict[str, Any] = {
+        "k": ("layer", "pages", "seq", "act_kv", None),
+        "v": ("layer", "pages", "seq", "act_kv", None),
+    }
+    if cfg.use_mamba or cfg.parallel_mamba:
+        layers["conv"] = ("layer", "batch", None, "act_dinner")
+        layers["ssm"] = ("layer", "batch", "act_dinner", None)
+    return {"layers": layers, "cur": ("batch",), "k_pos": ("batch", None),
+            "page_tbl": ("batch", None)}
+
+
+def init_paged_cache(cfg: ModelConfig, slots: int, n_pages: int,
+                     page_size: int, seq_len: int):
+    """Zero page pool; every page table entry points at the trash page
+    (physical page 0) and every k_pos is -1 (masked)."""
+    spec = paged_cache_spec(cfg, slots, n_pages, page_size, seq_len)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+    cache["k_pos"] = jnp.full(spec["k_pos"].shape, -1, jnp.int32)
+    return cache
+
+
+# ---------------------------------------------------------------------------
 # step functions (lowered by the launcher)
 # ---------------------------------------------------------------------------
 
@@ -395,6 +523,27 @@ def prefill_fn(params, batch, cfg: ModelConfig, engine: ActivationEngine,
     else:
         idx = (lengths - 1).astype(jnp.int32)[:, None, None]
         last = jnp.take_along_axis(x, idx, axis=1)         # [B, 1, d]
+    logits = lm_logits(params, last, cfg)[:, 0]
+    return logits, cache
+
+
+def prefill_prefix_fn(params, batch, cfg: ModelConfig,
+                      engine: ActivationEngine, prefix_kv, prefix_len: int,
+                      capacity: int, page_size: int):
+    """Prefix-cached admission step: ragged prefill of prompt suffixes
+    over a shared page-aligned prefix (run_stack_prefill_prefix). Logits
+    are read at each row's last real *suffix* token; the returned cache
+    covers only the suffix (page-shaped k/v) — prefix pages are already
+    in the pool and are never rewritten."""
+    tokens = batch["tokens"]
+    lengths = batch["lengths"]
+    x = embed_tokens(params, tokens, cfg, batch.get("patch_embeds"))
+    x, cache = run_stack_prefill_prefix(params, x, batch, cfg, engine,
+                                        prefix_kv, prefix_len, capacity,
+                                        page_size, lengths)
+    x = apply_norm(params["ln_f"], x, cfg)
+    idx = (lengths - 1).astype(jnp.int32)[:, None, None]
+    last = jnp.take_along_axis(x, idx, axis=1)             # [B, 1, d]
     logits = lm_logits(params, last, cfg)[:, 0]
     return logits, cache
 

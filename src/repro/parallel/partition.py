@@ -64,6 +64,11 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
     "batch":    (("pod", "data"), "data"),  # tuple candidate = use together;
                                             # plain "data" covers single-pod
                                             # meshes (no "pod" axis)
+    "pages":    (),                   # paged-KV physical page dim: pages are
+                                      # host-addressed (allocated/freed by the
+                                      # engine's page pool) exactly like decode
+                                      # slots, so sharding them would turn
+                                      # every page scatter into a reshuffle
     "seq":      (),
     "cache_seq": ("model",),          # KV-cache sequence dim (decode/prefill)
     "act_heads": ("model",),

@@ -1,8 +1,11 @@
 """Continuous-batching serve subsystem.
 
-`ServeEngine` (engine.py) owns the per-slot cache and the in-jit decode
-scan; `FifoScheduler` (scheduler.py) owns host-side request/slot
-bookkeeping and the prompt bucketing policy.
+`ServeEngine` (engine.py) owns the device cache — a shared page pool
+with per-slot page tables by default, legacy per-slot rings via
+`EngineConfig(cache="slot")` — and the in-jit decode scan;
+`FifoScheduler` (scheduler.py) owns host-side request/slot bookkeeping
+and the prompt bucketing policy; `PagePool` (paging.py) owns page
+allocation, worst-case reservations, and refcounted prefix chains.
 """
 from .engine import EngineConfig, EngineStats, ServeEngine, sample_tokens
 from .scheduler import Completion, FifoScheduler, Request, bucket_len

@@ -22,6 +22,20 @@ multi-row slot insert. Slot writes replace the *entire* row (all W key
 positions), so stale state from the previous occupant can never leak
 into the new request's attention.
 
+Cache contracts: by default (``EngineConfig(cache="paged")``) the KV
+ring lives in a fixed page pool [n_pages, page_size, ...] shared by all
+slots, with per-slot page tables mapping logical ring pages to physical
+pages (models/model.py paged contract). Admission is bounded by *free
+pages*, not free slots: prompt pages are allocated at admission (plus a
+worst-case reservation so lazy growth during decode can never
+deadlock), grown chunk-by-chunk as generation advances, and released at
+completion — so capacity tracks actual usage instead of worst-case
+context. Page-aligned common prompt prefixes are deduplicated via a
+refcounted host-side registry (paging.py): a hit admits those tokens
+without prefilling them, attending suffix queries over the cached
+pages. ``cache="slot"`` keeps the legacy one-full-ring-per-slot
+contract for A/B benchmarking.
+
 With a mesh, every jitted step (prefill, insert, decode) carries
 explicit NamedShardings: parameters and the per-slot cache are resolved
 from their logical axes via `launch/steps.py::serve_shardings` (the same
@@ -45,6 +59,7 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.parallel import partition as part
 
+from .paging import PagePool
 from .scheduler import (Completion, FifoScheduler, Request, SlotRun,
                         bucket_len)
 
@@ -99,6 +114,71 @@ def make_slot_insert(cfg: ModelConfig):
     return insert
 
 
+def make_paged_insert(cfg: ModelConfig, page_size: int):
+    """Jit-able batched admission for the paged cache contract: reshape
+    each admitted row's k/v into pages and scatter them into the shared
+    pool at `write_rows` [N, n_w] (physical page ids; trash-padded rows
+    write harmlessly into page 0), install the rows' page tables
+    `tbl_rows` [N, pages_per_slot] and per-slot vectors at `slots` [N].
+    On a prefix hit `write_rows` covers only the suffix pages, so shared
+    prefix pages are never rewritten."""
+
+    def insert(cache, state, slots, small_cache, slot_vals, tbl_rows,
+               write_rows):
+        layers = dict(cache["layers"])
+        for name in ("k", "v"):
+            pool = cache["layers"][name]              # [L, P, ps, KV, hd]
+            sm = small_cache["layers"][name]          # [L, N, n_w*ps, KV, hd]
+            L, N, Wx = sm.shape[:3]
+            pages = sm.astype(pool.dtype).reshape(
+                L, N, Wx // page_size, page_size, *sm.shape[3:])
+            layers[name] = pool.at[:, write_rows].set(pages)
+        for name in small_cache["layers"]:
+            if name in ("k", "v"):
+                continue                              # conv/ssm stay per-slot
+            big = cache["layers"][name]
+            layers[name] = big.at[:, slots].set(
+                small_cache["layers"][name].astype(big.dtype))
+        new_cache = {
+            "layers": layers,
+            "cur": cache["cur"].at[slots].set(small_cache["cur"]),
+            "k_pos": cache["k_pos"].at[slots].set(small_cache["k_pos"]),
+            "page_tbl": cache["page_tbl"].at[slots].set(tbl_rows),
+        }
+        new_state = dict(state)
+        for name, val in slot_vals.items():
+            new_state[name] = state[name].at[slots].set(
+                val.astype(state[name].dtype))
+        return new_cache, new_state
+
+    return insert
+
+
+def make_prefix_prefill_sample(cfg: ModelConfig, n_pre: int, page_size: int,
+                               capacity: int):
+    """Jit-able prefix-hit admission step: gather the shared `n_pre`-page
+    prefix out of the pool, ragged-prefill only the suffixes against it,
+    and sample first tokens on device — one dispatch, same contract as
+    make_prefill_sample but the batch carries *suffix* tokens/lengths.
+    The small cache's k_pos width is `capacity` (the padded ring), and
+    small k/v are suffix pages only."""
+    engine = steps_mod.make_engine(cfg)
+    prefix_len = n_pre * page_size
+
+    def prefill_sample(params, pool_kv, pages, batch, key, temperature):
+        prefix = {}
+        for name in ("k", "v"):
+            sel = pool_kv[name][:, pages]             # [L, n_pre, ps, KV, hd]
+            prefix[name] = sel.reshape(sel.shape[0], prefix_len,
+                                       *sel.shape[3:])
+        logits, cache = M.prefill_prefix_fn(params, batch, cfg, engine,
+                                            prefix, prefix_len, capacity,
+                                            page_size)
+        return sample_tokens(key, logits, temperature), cache
+
+    return prefill_sample
+
+
 def make_decode_chunk(cfg: ModelConfig, n_steps: int):
     """Jit-able (params, cache, state) -> (cache, state, toks [T, B]):
     `n_steps` decode steps fully on device. Rows record their sampled
@@ -150,6 +230,21 @@ class EngineConfig:
                                 # of extra compiled chunk sizes, saves
                                 # the wasted drain steps; False keeps
                                 # the untrimmed PR-2/3 behavior)
+    cache: str = "paged"        # "paged": shared page pool + per-slot
+                                # page tables, admission by free pages
+                                # (lazily grown, freed at completion);
+                                # "slot": the legacy one-full-ring-per-
+                                # slot contract, kept for A/B benching.
+                                # Pure-SSM stacks have no KV ring to
+                                # page and silently use "slot".
+    page_size: int = 16         # tokens per page (paged only)
+    n_pages: int | None = None  # physical pool size incl. the trash
+                                # page; None = slots * pages_per_slot
+                                # + 1, i.e. the slot contract's memory
+                                # footprint (equal-memory A/B default)
+    prefix_cache: bool = True   # share page-aligned common prompt
+                                # prefixes across requests (paged,
+                                # attention-only, no sliding window)
     seed: int = 0
 
     def __post_init__(self):
@@ -163,6 +258,14 @@ class EngineConfig:
         if self.admission not in ("batched", "serial"):
             raise ValueError(f"admission must be 'batched' or 'serial', "
                              f"got {self.admission!r}")
+        if self.cache not in ("paged", "slot"):
+            raise ValueError(f"cache must be 'paged' or 'slot', "
+                             f"got {self.cache!r}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size ({self.page_size}) must be >= 1")
+        if self.n_pages is not None and self.n_pages < 2:
+            raise ValueError(f"n_pages ({self.n_pages}) must be >= 2 "
+                             "(one trash page + one usable page)")
 
 
 @dataclasses.dataclass
@@ -180,6 +283,10 @@ class EngineStats:
     decode_chunks: int = 0
     decode_steps: int = 0          # sum of per-chunk in-jit steps
     decode_tokens: int = 0         # real tokens emitted during decode
+    pages_in_use: int = 0          # paged only: live (ref > 0) pool pages now
+    pages_peak: int = 0            # paged only: high-water mark of the above
+    prefix_hit_tokens: int = 0     # prompt tokens admitted straight from
+                                   # cached prefix pages (never prefilled)
 
     @property
     def prefill_tokens_per_s(self):
@@ -187,14 +294,42 @@ class EngineStats:
 
     @property
     def admission_tokens_per_s(self):
-        """Honest admission throughput: prompt tokens over the WHOLE
-        admission path (ragged prefill + batched slot insert)."""
+        """Honest admission throughput: *computed* prompt tokens over the
+        WHOLE admission path (ragged prefill + batched slot insert).
+        Prefix-hit tokens are excluded — they cost no prefill compute."""
         denom = self.prefill_s + self.insert_s
         return self.prefill_tokens / denom if denom else 0.0
 
     @property
+    def admitted_tokens_per_s(self):
+        """Admission throughput as the client sees it: ALL admitted
+        prompt tokens (computed + prefix hits) over the admission path.
+        With prefix caching this exceeds admission_tokens_per_s by
+        exactly the hit tokens' worth of skipped prefill."""
+        denom = self.prefill_s + self.insert_s
+        return ((self.prefill_tokens + self.prefix_hit_tokens) / denom
+                if denom else 0.0)
+
+    @property
+    def prefix_hit_rate(self):
+        """Fraction of admitted prompt tokens served from cached pages."""
+        total = self.prefill_tokens + self.prefix_hit_tokens
+        return self.prefix_hit_tokens / total if total else 0.0
+
+    @property
     def decode_tokens_per_s(self):
         return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+
+@dataclasses.dataclass
+class _SlotPages:
+    """Host-side page accounting for one occupied slot: the physical
+    pages backing its logical ring (shared prefix first), how many of
+    them are shared (refcounted, never written by this slot), and the
+    worst-case page count reserved at admission."""
+    pages: list
+    n_shared: int
+    worst: int
 
 
 class ServeEngine:
@@ -224,11 +359,45 @@ class ServeEngine:
         # SSM/conv state is contaminated by trailing pad tokens, so
         # stateful archs prefill at exact prompt lengths (scheduler.py)
         self._exact_buckets = cfg.use_mamba or cfg.parallel_mamba
+        # paged contract needs a KV ring; pure-SSM stacks fall back to
+        # the slot contract (their whole state is O(1) per row anyway)
+        self.paged = (self.ecfg.cache == "paged"
+                      and (cfg.has_attention or cfg.parallel_mamba))
+        # prefix pages replay cached k/v verbatim; SSM state depends on
+        # the full history (can't skip) and sliding-window rings are not
+        # in sequence order, so both opt out
+        self.prefix_enabled = (self.paged and self.ecfg.prefix_cache
+                               and cfg.sliding_window is None
+                               and not (cfg.use_mamba or cfg.parallel_mamba))
 
         B = self.ecfg.slots
         self.mesh = mesh
         self.rules = part.serve_rules(rules) if mesh is not None else None
-        cache = M.init_cache(cfg, B, self.ecfg.max_len, per_slot=True)
+        if self.paged:
+            ps = self.ecfg.page_size
+            self._n_per_slot = M.pages_per_slot(cfg, self.ecfg.max_len, ps)
+            self._w_pad = self._n_per_slot * ps       # padded ring width
+            n_pages = self.ecfg.n_pages
+            if n_pages is None:
+                n_pages = B * self._n_per_slot + 1    # slot-contract memory
+            if n_pages - 1 < self._n_per_slot:
+                raise ValueError(
+                    f"n_pages={n_pages} cannot hold one worst-case request "
+                    f"({self._n_per_slot} pages + the trash page): the "
+                    "queue head could never be admitted")
+            self._n_pages = n_pages
+            self._pool = PagePool(n_pages, ps)
+            # host mirror of the device page table; rows start at trash.
+            # The mirror is authoritative — device copy is refreshed
+            # lazily (one upload before a chunk, no extra dispatches)
+            self._tbl = np.zeros((B, self._n_per_slot), np.int32)
+            self._tbl_dirty = False
+            self._slot_pages: dict[int, _SlotPages] = {}
+            cache = M.init_paged_cache(cfg, B, n_pages, ps, self.ecfg.max_len)
+            prefill_capacity = self._w_pad
+        else:
+            cache = M.init_cache(cfg, B, self.ecfg.max_len, per_slot=True)
+            prefill_capacity = self.capacity
         state = {
             "tok": jnp.zeros((B,), jnp.int32),
             "key": jax.random.key(self.ecfg.seed),
@@ -240,22 +409,38 @@ class ServeEngine:
         }
         self._key = jax.random.key(self.ecfg.seed + 1)
 
-        prefill = make_prefill_sample(cfg, self.capacity)
-        insert = make_slot_insert(cfg)
+        prefill = make_prefill_sample(cfg, prefill_capacity)
+        insert = (make_paged_insert(cfg, self.ecfg.page_size) if self.paged
+                  else make_slot_insert(cfg))
 
         self._decode_fns: dict = {}    # in-jit step count -> jitted chunk
+        self._prefix_fns: dict = {}    # (n_pre, suffix bucket) -> jitted fn
         if mesh is None:
             self._shardings = None
+            self._small_csh = None
             self.params, self.cache, self.state = params, cache, state
             self._prefill = jax.jit(prefill)
             self._insert = jax.jit(insert, donate_argnums=(0, 1))
         else:
-            psh, csh, repl = steps_mod.serve_shardings(
-                cfg, B, self.ecfg.max_len, mesh, self.rules)
+            if self.paged:
+                psh, csh, repl = steps_mod.serve_shardings(
+                    cfg, B, self.ecfg.max_len, mesh, self.rules,
+                    page_size=self.ecfg.page_size, n_pages=self._n_pages)
+                # admission's small cache keeps the per-slot layout
+                # (k/v [L, N, W, KV, hd]); shard it by the per-slot axes
+                small_csh = steps_mod.axes_shardings(
+                    M.cache_axes(cfg, per_slot=True),
+                    M.cache_spec(cfg, B, self.ecfg.max_len, per_slot=True),
+                    mesh, self.rules)
+            else:
+                psh, csh, repl = steps_mod.serve_shardings(
+                    cfg, B, self.ecfg.max_len, mesh, self.rules)
+                small_csh = csh
             ssh = {name: repl for name in state}
             vsh = {name: repl for name in
                    ("tok", "emitted", "active", "budget", "temp", "eos")}
             self._shardings = (psh, csh, ssh, repl)
+            self._small_csh = small_csh
             self.params = jax.device_put(params, psh)
             self.cache = jax.device_put(cache, csh)
             self.state = jax.device_put(state, ssh)
@@ -263,11 +448,17 @@ class ServeEngine:
                 self._under_rules(prefill),
                 in_shardings=(psh, {"tokens": repl, "lengths": repl},
                               repl, repl),
-                out_shardings=(repl, csh))
-            self._insert = jax.jit(
-                self._under_rules(insert),
-                in_shardings=(csh, ssh, repl, csh, vsh),
-                out_shardings=(csh, ssh), donate_argnums=(0, 1))
+                out_shardings=(repl, small_csh))
+            if self.paged:
+                self._insert = jax.jit(
+                    self._under_rules(insert),
+                    in_shardings=(csh, ssh, repl, small_csh, vsh, repl, repl),
+                    out_shardings=(csh, ssh), donate_argnums=(0, 1))
+            else:
+                self._insert = jax.jit(
+                    self._under_rules(insert),
+                    in_shardings=(csh, ssh, repl, small_csh, vsh),
+                    out_shardings=(csh, ssh), donate_argnums=(0, 1))
         self._decode_at(self.ecfg.chunk)     # seed the cache per config
 
         self.sched = FifoScheduler(B)
@@ -293,6 +484,29 @@ class ServeEngine:
                     in_shardings=(psh, csh, ssh),
                     out_shardings=(csh, ssh, repl), donate_argnums=(1, 2))
             self._decode_fns[n_steps] = fn
+        return fn
+
+    def _prefix_prefill_at(self, n_pre: int, sbucket: int):
+        """The jitted prefix-hit admission step for an `n_pre`-page
+        shared prefix and a `sbucket`-padded suffix block, built on
+        demand (one trace per (n_pre, sbucket) pair)."""
+        key = (n_pre, sbucket)
+        fn = self._prefix_fns.get(key)
+        if fn is None:
+            raw = make_prefix_prefill_sample(
+                self.cfg, n_pre, self.ecfg.page_size, self._w_pad)
+            if self._shardings is None:
+                fn = jax.jit(raw)
+            else:
+                psh, csh, ssh, repl = self._shardings
+                pool_sh = {"k": csh["layers"]["k"], "v": csh["layers"]["v"]}
+                fn = jax.jit(
+                    self._under_rules(raw),
+                    in_shardings=(psh, pool_sh, repl,
+                                  {"tokens": repl, "lengths": repl},
+                                  repl, repl),
+                    out_shardings=(repl, self._small_csh))
+            self._prefix_fns[key] = fn
         return fn
 
     def _under_rules(self, fn):
@@ -334,47 +548,136 @@ class ServeEngine:
                           max_len=self.ecfg.max_prompt_len,
                           exact=self._exact_buckets)
 
-    def _admit(self, slots: list, reqs: list) -> None:
-        """Admit `reqs` (same prefill bucket) into free rows `slots[:N]`:
-        one ragged prefill dispatch with on-device first-token sampling,
-        one multi-row slot insert. Only the [N] tok0 vector is synced."""
+    def _match_of(self, req: Request) -> list:
+        """Cached prefix page chain for a request (possibly empty),
+        capped so the suffix is never empty — the admission step needs
+        at least one real token to read first-token logits from."""
+        if not self.prefix_enabled:
+            return []
+        limit = (len(req.tokens) - 1) // self.ecfg.page_size
+        return self._pool.match(req.tokens, limit=limit)
+
+    def _admit_key(self, req: Request):
+        """Requests admitted in one ragged dispatch must agree on both
+        the (suffix) prefill bucket and the matched prefix chain."""
+        match = self._match_of(req)
+        sbucket = self._bucket_of(
+            len(req.tokens) - len(match) * self.ecfg.page_size)
+        return (sbucket, tuple(match))
+
+    def _page_cost(self, req: Request) -> int:
+        """Worst-case NEW pages this request could ever need (prompt plus
+        full generation budget, minus its cached prefix). Admitting by
+        this bound is what lets growth draw on reservations instead of
+        failing mid-decode."""
+        ps = self.ecfg.page_size
+        L = len(req.tokens)
+        gen = min(req.max_new, self.ecfg.max_len - L)
+        worst = min(-(-(L + gen) // ps), self._n_per_slot)
+        return max(worst - len(self._match_of(req)), 0)
+
+    def _reserve_pages(self, reqs: list):
+        """Pin each request's matched prefix, allocate its prompt pages
+        and reserve its worst-case growth, in queue order. A request
+        that no longer fits (the evictable pool shrank since the batch
+        was sized) rolls back and returns to the queue front along with
+        everything behind it. Returns (admitted requests, their plans)."""
+        ps = self.ecfg.page_size
+        taken, plans = [], []
+        for i, req in enumerate(reqs):
+            match = self._match_of(req)
+            if match:
+                # pin before any alloc below could evict the chain
+                self._pool.share(match)
+            L = len(req.tokens)
+            gen = min(req.max_new, self.ecfg.max_len - L)
+            n_now = min(-(-L // ps), self._n_per_slot)   # prompt pages
+            worst = min(-(-(L + gen) // ps), self._n_per_slot)
+            new = self._pool.alloc(n_now - len(match))
+            ok = new is not None and self._pool.reserve(worst - n_now)
+            if not ok:
+                if new is not None:
+                    self._pool.release(new)
+                if match:
+                    self._pool.release(match)
+                self.sched.queue.extendleft(reversed(reqs[i:]))
+                break
+            taken.append(req)
+            plans.append(_SlotPages(pages=match + new,
+                                    n_shared=len(match), worst=worst))
+        return taken, plans
+
+    def _release_plan(self, sp: _SlotPages) -> None:
+        self._pool.release(sp.pages)
+        self._pool.unreserve(sp.worst - len(sp.pages))
+
+    def _admit(self, slots: list, reqs: list) -> bool:
+        """Admit `reqs` (same admission key) into free rows `slots[:N]`:
+        one ragged prefill dispatch with on-device first-token sampling
+        (prefix hits prefill only the suffix against the cached pages),
+        one multi-row insert. Only the [N] tok0 vector is synced.
+        Returns False when nothing could be admitted (page exhaustion:
+        the caller stops admitting until decode frees pages)."""
+        plans = None
+        if self.paged:
+            reqs, plans = self._reserve_pages(reqs)
+            if not reqs:
+                return False
+            self.stats.pages_in_use = self._pool.in_use
+            self.stats.pages_peak = self._pool.pages_peak
         N = len(reqs)
-        lens = [len(r.tokens) for r in reqs]
+        ps = self.ecfg.page_size
+        n_pre = plans[0].n_shared if plans else 0
+        pre_len = n_pre * ps
+        lens = [len(r.tokens) - pre_len for r in reqs]     # suffix lengths
         bucket = self._bucket_of(lens[0])
         padded = np.zeros((N, bucket), np.int32)
         for i, r in enumerate(reqs):
-            padded[i, :lens[i]] = r.tokens
+            padded[i, :lens[i]] = r.tokens[pre_len:]
         batch = {"tokens": jnp.asarray(padded),
                  "lengths": jnp.asarray(lens, jnp.int32)}
         self._key, sub = jax.random.split(self._key)
         temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
 
         t0 = time.perf_counter()
-        tok0, small_cache = self._prefill(self.params, batch, sub, temps)
+        if n_pre:
+            pool_kv = {"k": self.cache["layers"]["k"],
+                       "v": self.cache["layers"]["v"]}
+            pages = jnp.asarray(plans[0].pages[:n_pre], jnp.int32)
+            tok0, small_cache = self._prefix_prefill_at(n_pre, bucket)(
+                self.params, pool_kv, pages, batch, sub, temps)
+        else:
+            tok0, small_cache = self._prefill(self.params, batch, sub, temps)
         tok0 = np.asarray(tok0)                            # [N] ints; syncs
         now = time.perf_counter()
         self.stats.prefill_s += now - t0
         self.stats.prefill_tokens += sum(lens)
+        self.stats.prefix_hit_tokens += N * pre_len
         self.stats.prefill_padded_tokens += N * bucket
         self.stats.prefill_batches += 1
         self.stats.prefill_requests += N
 
-        budgets = [min(r.max_new, self.ecfg.max_len - L)
-                   for r, L in zip(reqs, lens)]
+        budgets = [min(r.max_new, self.ecfg.max_len - len(r.tokens))
+                   for r in reqs]
         # single-token requests finish at admission and never occupy a
         # slot's scheduler binding; when the batch has survivors their
-        # dead rows still ride the one batched insert (active=False) and
-        # are fully overwritten by the row's next occupant, so nothing
-        # can leak — an all-dead batch skips the insert entirely
+        # dead rows still ride the one batched insert (active=False,
+        # page-table row all-trash) and are fully overwritten by the
+        # row's next occupant, so nothing can leak — an all-dead batch
+        # skips the insert entirely
         live = np.ones(N, bool)
         for i, (req, t, budget) in enumerate(zip(reqs, tok0, budgets)):
             if int(t) == req.eos_id or budget <= 1:
                 reason = "eos" if int(t) == req.eos_id else "length"
                 self._complete(req, [int(t)], reason, admitted_at=now)
                 live[i] = False
+                if plans:
+                    self._release_plan(plans[i])
 
         if not live.any():
-            return                      # nothing survives: skip the insert
+            if self.paged:
+                self.stats.pages_in_use = self._pool.in_use
+            return True                 # requests completed: progress
         slot_vals = {
             "tok": jnp.asarray(tok0.astype(np.int32)),
             "emitted": jnp.ones((N,), jnp.int32),
@@ -383,18 +686,48 @@ class ServeEngine:
             "temp": temps,
             "eos": jnp.asarray([r.eos_id for r in reqs], jnp.int32),
         }
+        insert_args = [self.cache, self.state,
+                       jnp.asarray(slots[:N], jnp.int32), small_cache,
+                       slot_vals]
+        if self.paged:
+            # logical -> physical rows for the insert: the full table
+            # per row (unallocated tail maps to trash) plus the pages
+            # the small cache actually writes — the whole padded ring
+            # when cold, only the suffix pages on a prefix hit (shared
+            # prefix pages are never rewritten)
+            tbl_rows = np.zeros((N, self._n_per_slot), np.int32)
+            n_w = self._n_per_slot if n_pre == 0 else -(-bucket // ps)
+            write_rows = np.zeros((N, n_w), np.int32)
+            for i, sp in enumerate(plans):
+                if not live[i]:
+                    continue
+                tbl_rows[i, :len(sp.pages)] = sp.pages
+                own = sp.pages[n_pre:]
+                write_rows[i, :min(len(own), n_w)] = own[:n_w]
+            insert_args += [jnp.asarray(tbl_rows), jnp.asarray(write_rows)]
         t0 = time.perf_counter()
-        self.cache, self.state = self._insert(
-            self.cache, self.state,
-            jnp.asarray(slots[:N], jnp.int32), small_cache, slot_vals)
+        self.cache, self.state = self._insert(*insert_args)
         # the insert is the other half of admission: sync (any output of
         # the one dispatch) so its cost lands in the stats instead of
         # being silently attributed to the next decode chunk
         jax.block_until_ready(self.state["tok"])
         self.stats.insert_s += time.perf_counter() - t0
+        if self.paged:
+            self._tbl[slots[:N]] = tbl_rows    # mirror == device now
+            if self.prefix_enabled:
+                # every fully-written prompt page becomes (or extends) a
+                # registered chain; duplicate keys keep the first page
+                for i, (req, sp) in enumerate(zip(reqs, plans)):
+                    if live[i]:
+                        n_full = len(req.tokens) // ps
+                        self._pool.register(req.tokens[:n_full * ps],
+                                            sp.pages[:n_full])
         for i in np.nonzero(live)[0]:
             self.sched.bind(slots[i], SlotRun(
                 request=reqs[i], tokens=[int(tok0[i])], admitted_at=now))
+            if self.paged:
+                self._slot_pages[slots[i]] = plans[i]
+        return True
 
     def _admit_ready(self) -> None:
         while True:
@@ -402,13 +735,19 @@ class ServeEngine:
             if not free or not self.sched.queue:
                 return
             # early-completed requests leave their slots free, so the
-            # loop re-checks free slots and the (new) queue head's bucket
+            # loop re-checks free slots and the (new) queue head's key
             # each round rather than iterating a fixed plan
             width = 1 if self.ecfg.admission == "serial" else len(free)
-            reqs = self.sched.next_batch(width, self._bucket_of)
+            if self.paged:
+                reqs = self.sched.next_batch(
+                    width, self._admit_key, cost_of=self._page_cost,
+                    budget=self._pool.available())
+            else:
+                reqs = self.sched.next_batch(width, self._admit_key)
             if not reqs:
                 return
-            self._admit(free, reqs)
+            if not self._admit(free, reqs):
+                return
 
     def _complete(self, req: Request, tokens, reason: str, *,
                   admitted_at: float) -> None:
@@ -416,6 +755,51 @@ class ServeEngine:
             uid=req.uid, prompt_len=len(req.tokens), tokens=list(tokens),
             finish_reason=reason, submitted_at=req.submitted_at,
             admitted_at=admitted_at, finished_at=time.perf_counter()))
+
+    # -- page lifecycle (paged contract only) ------------------------------
+
+    def _grow_pages(self, active: list, n_steps: int) -> None:
+        """Lazily allocate the pages the coming chunk will write into,
+        drawn from each slot's admission-time reservation (cannot fail).
+        A row that exhausts its budget mid-chunk keeps writing — past
+        its last allocated page those writes land on the trash page."""
+        ps = self.ecfg.page_size
+        for b in active:
+            run = self.sched.slots[b]
+            sp = self._slot_pages[b]
+            L = len(run.request.tokens)
+            g = len(run.tokens)                  # generated so far (tok0..)
+            # chunk inputs sit at positions L+g-1 .. L+g-2+n_steps
+            need = min(-(-(L + g - 1 + n_steps) // ps),
+                       self._n_per_slot, sp.worst)
+            delta = need - len(sp.pages)
+            if delta > 0:
+                new = self._pool.alloc_reserved(delta)
+                self._tbl[b, len(sp.pages):need] = new
+                sp.pages.extend(new)
+                self._tbl_dirty = True
+        self.stats.pages_in_use = self._pool.in_use
+        self.stats.pages_peak = self._pool.pages_peak
+
+    def _free_slot(self, b: int) -> None:
+        """Return an evicted slot's pages — decref shared prefix pages,
+        park registered ref-0 pages as evictable cache, free the rest —
+        and point its table row back at trash."""
+        self._release_plan(self._slot_pages.pop(b))
+        self._tbl[b] = 0
+        self._tbl_dirty = True
+        self.stats.pages_in_use = self._pool.in_use
+
+    def _push_tbl(self) -> None:
+        """Upload the host page-table mirror if it changed (page growth
+        or slot free): one transfer before the chunk, zero dispatches."""
+        if not self._tbl_dirty:
+            return
+        tbl = jnp.asarray(self._tbl)
+        if self.mesh is not None:
+            tbl = jax.device_put(tbl, self._shardings[3])
+        self.cache = dict(self.cache, page_tbl=tbl)
+        self._tbl_dirty = False
 
     # -- decode loop -------------------------------------------------------
 
@@ -444,6 +828,9 @@ class ServeEngine:
             n_steps = max(1, min(n_steps, need))
 
         decode = self._decode_at(n_steps)
+        if self.paged:
+            self._grow_pages(active, n_steps)
+            self._push_tbl()
         t0 = time.perf_counter()
         self.cache, self.state, toks = decode(
             self.params, self.cache, self.state)
@@ -462,6 +849,8 @@ class ServeEngine:
                 self.stats.decode_tokens += 1
                 if tok == req.eos_id or len(run.tokens) >= budget:
                     self.sched.evict(b)
+                    if self.paged:
+                        self._free_slot(b)
                     self._complete(
                         req, run.tokens,
                         "eos" if tok == req.eos_id else "length",

@@ -96,15 +96,24 @@ class FifoScheduler:
     def next_request(self) -> Optional[Request]:
         return self.queue.popleft() if self.queue else None
 
-    def next_batch(self, n: int, bucket_of) -> list:
-        """Pop up to `n` requests that share the head request's prefill
-        bucket (``bucket_of``: prompt length -> padded length).
+    def next_batch(self, n: int, key_of, *, cost_of=None,
+                   budget: int | None = None) -> list:
+        """Pop up to `n` requests that share the head request's admission
+        key (``key_of``: Request -> hashable; for the engine this is the
+        prefill bucket plus, under prefix caching, the matched page
+        chain — requests in one batch prefill in ONE ragged dispatch, so
+        they must agree on both).
 
-        The queue head always leads — its bucket defines the batch, so a
+        The queue head always leads — its key defines the batch, so a
         request can never be starved by later arrivals — and requests
-        left behind keep their relative order. Grouping by bucket is what
-        lets the engine prefill the whole batch in ONE ragged dispatch
-        instead of one dispatch per request.
+        left behind keep their relative order.
+
+        With ``cost_of``/``budget`` (paged admission: worst-case new
+        pages vs pages available) the batch additionally stays within
+        budget. A head that doesn't fit by itself blocks the whole
+        queue — admitting cheaper later requests over its head would
+        starve large prompts under sustained load — so the engine sees
+        [] and waits for decode to free pages (backpressure, no OOM).
 
         Scanning stops as soon as the batch is full: the untouched tail
         is never popped/re-appended (an earlier version rotated the
@@ -112,12 +121,20 @@ class FifoScheduler:
         O(queue) churn per batch under load for no benefit)."""
         if n < 1 or not self.queue:
             return []
-        head_bucket = bucket_of(len(self.queue[0].tokens))
+        remaining = budget
+        if cost_of is not None and remaining is not None \
+                and cost_of(self.queue[0]) > remaining:
+            return []                   # head-of-line backpressure
+        head_key = key_of(self.queue[0])
         taken, skipped = [], []
         while self.queue and len(taken) < n:
             req = self.queue.popleft()
-            if bucket_of(len(req.tokens)) == head_bucket:
+            cost = cost_of(req) if cost_of is not None else 0
+            if key_of(req) == head_key and \
+                    (remaining is None or cost <= remaining):
                 taken.append(req)
+                if remaining is not None:
+                    remaining -= cost
             else:
                 skipped.append(req)
         # skipped requests return to the FRONT (before the untouched

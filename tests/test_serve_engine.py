@@ -347,8 +347,8 @@ class TestScheduler:
                 bucket_len(65, min_bucket=16, max_len=64, exact=exact)
 
     def test_next_batch_groups_by_head_bucket(self):
-        def bucket_of(n):
-            return bucket_len(n, min_bucket=16, max_len=64)
+        def bucket_of(req):
+            return bucket_len(len(req.tokens), min_bucket=16, max_len=64)
 
         s = FifoScheduler(4)
         lens = [9, 30, 12, 14, 40, 10]      # buckets 16/32/16/16/64/16
@@ -371,9 +371,9 @@ class TestScheduler:
         requests left behind keep exact FIFO order."""
         calls = []
 
-        def bucket_of(n):
-            calls.append(n)
-            return bucket_len(n, min_bucket=16, max_len=64)
+        def bucket_of(req):
+            calls.append(len(req.tokens))
+            return bucket_len(len(req.tokens), min_bucket=16, max_len=64)
 
         s = FifoScheduler(4)
         lens = [9, 30, 12, 14, 40, 10, 11, 13]  # buckets 16/32/16/16/64/16...
@@ -391,8 +391,8 @@ class TestScheduler:
         assert len(calls) == 5
 
     def test_next_batch_respects_width(self):
-        def bucket_of(n):
-            return bucket_len(n, min_bucket=16, max_len=64)
+        def bucket_of(req):
+            return bucket_len(len(req.tokens), min_bucket=16, max_len=64)
 
         s = FifoScheduler(2)
         for i in range(5):

@@ -49,6 +49,17 @@ for tp in (2, 4):
     assert np.array_equal(outs[tp], outs[1]), (
         f"TP={tp} diverged from TP=1",
         outs[tp].tolist(), outs[1].tolist())
+
+# the paged pool (serve_batch default) and the legacy per-slot cache
+# must agree under TP too: the pool's page dim is host-addressed like
+# slots, so sharding is a pure layout change for both contracts
+mesh = make_host_mesh(1, 2)
+with part.axis_rules(mesh):
+    slot_tokens, _ = serve_batch(cfg, params, prompts, 8, mesh=mesh,
+                                 cache="slot")
+assert np.array_equal(np.asarray(slot_tokens), outs[2]), (
+    "TP=2 slot cache diverged from TP=2 paged",
+    np.asarray(slot_tokens).tolist(), outs[2].tolist())
 print("TP-IDENTITY-OK")
 """
 
