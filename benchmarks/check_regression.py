@@ -52,6 +52,14 @@ def _metrics(doc: dict) -> dict:
             doc["capacity_sweep"]["concurrency_gain"], "higher")
         out["prefix.hit_rate"] = (
             doc["prefix_sweep"]["on"]["prefix_hit_rate"], "higher")
+        # guarded: baselines predating the token-budget scheduler have
+        # no interference sweep (their other metrics still gate)
+        if "interference_sweep" in doc:
+            out["interference.itl_p99_ratio"] = (
+                doc["interference_sweep"]["itl_p99_ratio"], "higher")
+            out["interference.prefill_chunks"] = (
+                doc["interference_sweep"]["chunked"]["prefill_chunks"],
+                "higher")
     elif kind == "kernel":
         for r in doc["rows"]:
             key = f"err.{r['kernel']}.{r['scheme']}.{r['lookup']}.{r['shape']}"

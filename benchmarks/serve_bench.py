@@ -43,6 +43,13 @@ Three measurements on the smoke qwen3 config (CPU; relative numbers):
     recompute); reports the measured prefix hit rate and p50/p99 queue
     latency per mode. The PASS criterion is a nonzero hit rate with
     tokens admitted faster than the cold path per admitted token.
+  * interference sweep — short decoding requests sharing the engine
+    with late-arriving 120-token prompts, one-shot admission vs the
+    token-budget schedule (`chunk_prefill=16`). Reports the shorts'
+    TTFT and worst p99 inter-token gap per mode; the PASS criterion is
+    the chunked schedule's short-request ITL p99 strictly below the
+    one-shot engine's (a long prefill may stall decode by at most one
+    chunk, never a whole prompt).
 """
 from __future__ import annotations
 
@@ -239,6 +246,61 @@ def _prefix_sweep(cfg, params, seed):
     return out
 
 
+def _interference_sweep(cfg, params, seed):
+    """Long-prompt interference: short decoding requests sharing the
+    engine with late-arriving long prompts, one-shot admission vs the
+    token-budget schedule (chunk_prefill on). In the one-shot engine a
+    long prompt's whole prefill dispatch lands between two decode
+    chunks, so every short request eats a ~120-token stall in its
+    inter-token gaps; chunked, the same prompt is fed 16 tokens per
+    iteration and the worst gap a short sees is one chunk. Reports
+    short-request TTFT and ITL p50/p99 per mode (ITL at chunk-sync
+    granularity — exactly where the interference shows) plus the
+    deterministic chunk count."""
+    max_prompt, long_len, gen_short, gen_long = 128, 120, 48, 4
+    rng = np.random.RandomState(seed + 31)
+    shorts = [rng.randint(0, 512, (int(L),)).astype(np.int32)
+              for L in rng.randint(8, 17, size=3)]
+    longs = [rng.randint(0, 512, (long_len,)).astype(np.int32)
+             for _ in range(2)]
+    out = {"short_requests": len(shorts), "long_prompt_tokens": long_len}
+    for mode in ("one_shot", "chunked"):
+        eng = ServeEngine(cfg, params, EngineConfig(
+            slots=SLOTS, max_prompt_len=max_prompt,
+            max_len=max_prompt + gen_short, chunk=4, seed=seed,
+            page_size=16, prefix_cache=False,
+            chunk_prefill=16 if mode == "chunked" else 0))
+
+        def one_pass():
+            from repro.serve.engine import EngineStats
+            eng.stats = EngineStats()
+            for p in shorts:
+                eng.submit(p, max_new=gen_short)
+            for p in longs:
+                eng.submit(p, max_new=gen_long)
+            done = eng.run()
+            eng.completions = []
+            return done
+
+        one_pass()                                   # warm
+        done = one_pass()
+        shorts_done = [c for c in done if c.prompt_len < long_len]
+        ttft = [c.ttft_s for c in shorts_done]
+        itl = [c.itl_p99_s for c in shorts_done]
+        out[mode] = {
+            "ttft_p50_s": float(np.percentile(ttft, 50)),
+            "itl_p99_p50_s": float(np.percentile(itl, 50)),
+            # worst short request's p99 inter-token gap: the headline
+            # interference number (one long prefill stalling any short
+            # shows up here)
+            "itl_p99_s": float(max(itl)),
+            "prefill_chunks": eng.stats.prefill_chunks,
+        }
+    out["itl_p99_ratio"] = (out["one_shot"]["itl_p99_s"]
+                            / max(out["chunked"]["itl_p99_s"], 1e-9))
+    return out
+
+
 def run(verbose: bool = True, json_path: str | None = None,
         arch: str = "qwen3-0.6b", seed: int = 0) -> dict:
     cfg = registry.get(arch, smoke=True)
@@ -315,6 +377,12 @@ def run(verbose: bool = True, json_path: str | None = None,
                  and prefix["on"]["admitted_tokens_per_s"]
                  > prefix["off"]["admitted_tokens_per_s"])
 
+    # -- long-prompt interference: chunked vs one-shot prefill -----------
+    interference = _interference_sweep(cfg, params, seed)
+    interference_ok = (interference["chunked"]["prefill_chunks"] > 0
+                       and interference["chunked"]["itl_p99_s"]
+                       < interference["one_shot"]["itl_p99_s"])
+
     result = {
         "arch": cfg.name,
         "slots": SLOTS,
@@ -327,8 +395,10 @@ def run(verbose: bool = True, json_path: str | None = None,
         "admission_sweep": admission,
         "capacity_sweep": capacity,
         "prefix_sweep": prefix,
+        "interference_sweep": interference,
         "status": "PASS" if (speedup > 1.0 and admission_ok
-                             and capacity_ok and prefix_ok) else "FAIL",
+                             and capacity_ok and prefix_ok
+                             and interference_ok) else "FAIL",
     }
     if verbose:
         print(f"== serve_bench ({cfg.name}, {SLOTS} slots, gen {GEN}) ==")
@@ -367,6 +437,14 @@ def run(verbose: bool = True, json_path: str | None = None,
               f"{pn['admitted_tokens_per_s']:.0f} tok/s vs "
               f"{po['admitted_tokens_per_s']:.0f} cold; queue p50 "
               f"{pn['p50_queue_s']*1e3:.0f} vs {po['p50_queue_s']*1e3:.0f} ms")
+        io, ic = interference["one_shot"], interference["chunked"]
+        print(f"interfere ({interference['long_prompt_tokens']}-token "
+              f"prompts vs decoding shorts): short ITL p99 "
+              f"{ic['itl_p99_s']*1e3:.0f} ms chunked "
+              f"({ic['prefill_chunks']} chunks) vs "
+              f"{io['itl_p99_s']*1e3:.0f} ms one-shot "
+              f"({interference['itl_p99_ratio']:.1f}x); ttft p50 "
+              f"{ic['ttft_p50_s']*1e3:.0f} vs {io['ttft_p50_s']*1e3:.0f} ms")
         print(f"status: {result['status']}")
     if json_path:
         with open(json_path, "w") as f:

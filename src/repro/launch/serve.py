@@ -126,37 +126,52 @@ def serve_batch(cfg, params, prompts, gen_tokens: int, *,
                 slots: int | None = None, chunk: int = 8,
                 eos_id: int | None = None, mesh=None,
                 rules: dict | None = None, cache: str = "paged",
-                page_size: int = 16, prefix_cache: bool = True):
+                page_size: int = 16, prefix_cache: bool = True,
+                chunk_prefill: int = 0, token_budget: int | None = None):
     """prompts: int32 [B, S(, K)]. Returns (tokens [B, gen(, K)], stats).
 
     backend "engine": continuous-batching ServeEngine (batched-bucket
-    admission, in-jit scan decode; `mesh` shards its datapath). "python":
-    legacy per-token loop. Multi-codebook archs and an explicit
-    `capacity` (the engine sizes its own per-slot cache from
-    S + gen_tokens) force the python path, which honors it exactly.
+    admission, in-jit scan decode; `mesh` shards its datapath;
+    `chunk_prefill`/`token_budget` select its token-budget schedule).
+    "python": legacy per-token loop — the only path for multi-codebook
+    (musicgen) decode, which is not slot-batched. An explicit `capacity`
+    overrides the engine's default S + gen_tokens cache sizing (it must
+    still fit every request; the python path honors it exactly too).
 
     With `eos_id`, rows that emit it stop early; every returned row is
     right-padded with 0 to gen_tokens, so completions of ragged lengths
     still stack into one [B, gen] block."""
     B, S = prompts.shape[0], prompts.shape[1]
-    if cfg.n_codebooks > 1 or backend == "python" or capacity is not None:
+    if cfg.n_codebooks > 1 or backend == "python":
         if mesh is not None and mesh.size > 1:
             # refusing beats the pre-PR-3 failure mode: a mesh that is
             # accepted and then silently ignored looks exactly like TP
             # working until someone checks device memory
             raise NotImplementedError(
                 "sharded serving is engine-only; the python fallback "
-                "(multi-codebook / explicit capacity / backend='python') "
-                "would serve unsharded despite the mesh")
+                "(multi-codebook / backend='python') would serve "
+                "unsharded despite the mesh")
         return _serve_batch_python(cfg, params, prompts, gen_tokens,
                                    temperature=temperature, seed=seed,
                                    capacity=capacity, eos_id=eos_id)
 
+    max_len = S + gen_tokens
+    if capacity is not None:
+        # an earlier version silently rerouted any explicit capacity to
+        # the python loop (losing batching AND the mesh); the engine
+        # sizes per-slot rings itself, so honor it as max_len instead
+        if capacity < max_len:
+            raise ValueError(
+                f"capacity {capacity} < prompt_len + gen_tokens "
+                f"({S} + {gen_tokens}): requests could not finish")
+        max_len = capacity
     ecfg = EngineConfig(slots=slots or B, max_prompt_len=S,
-                        max_len=S + gen_tokens,
+                        max_len=max_len,
                         chunk=max(1, min(chunk, gen_tokens - 1) or 1),
                         cache=cache, page_size=page_size,
-                        prefix_cache=prefix_cache, seed=seed)
+                        prefix_cache=prefix_cache,
+                        chunk_prefill=chunk_prefill,
+                        token_budget=token_budget, seed=seed)
     engine = ServeEngine(cfg, params, ecfg, mesh=mesh, rules=rules)
     for b in range(B):
         engine.submit(np.asarray(prompts[b]), gen_tokens,
@@ -204,6 +219,15 @@ def main(argv=None):
                    help="tokens per KV page (--cache paged)")
     p.add_argument("--no-prefix-cache", action="store_true",
                    help="disable prefix page sharing (--cache paged)")
+    p.add_argument("--chunk-prefill", type=int, default=0,
+                   help="prompt tokens per prefill chunk; > 0 switches "
+                        "the engine to the token-budget schedule that "
+                        "interleaves chunked prefill with decode "
+                        "(paged attention archs only)")
+    p.add_argument("--token-budget", type=int, default=None,
+                   help="token budget per engine iteration (requires "
+                        "--chunk-prefill; default slots*chunk + "
+                        "chunk_prefill)")
     p.add_argument("--json", default=None, help="write stats JSON here")
     args = p.parse_args(argv)
 
@@ -246,7 +270,12 @@ def main(argv=None):
                                     temperature=args.temperature,
                                     seed=args.seed, backend=args.backend,
                                     slots=args.slots, chunk=args.chunk,
-                                    eos_id=args.eos_id, mesh=mesh)
+                                    eos_id=args.eos_id, mesh=mesh,
+                                    cache=args.cache,
+                                    page_size=args.page_size,
+                                    prefix_cache=not args.no_prefix_cache,
+                                    chunk_prefill=args.chunk_prefill,
+                                    token_budget=args.token_budget)
 
     print(f"[serve] prefill {stats.prefill_tokens_per_s:,.0f} tok/s "
           f"({stats.prefill_s*1e3:.0f} ms), decode "

@@ -159,6 +159,23 @@ def make_prefill_step(cfg: ModelConfig, capacity: int | None = None):
     return prefill_step
 
 
+def make_prefill_chunk_step(cfg: ModelConfig, page_size: int):
+    """Chunked-admission prefill step (paged serving): resume one slot's
+    ragged prefill at a traced offset, scattering the chunk's K/V into
+    the slot's pool pages and attending over its previously written
+    ring. (params, batch{tokens [1,S]}, pool_kv, tbl_row [n],
+    k_pos_row [W], pos, clen) -> (last-token logits [1, V], new pool
+    {"k","v"}, new k_pos row). The serve engine wraps this in its
+    chunk dispatch (serve/engine.py::make_chunk_prefill)."""
+    engine = _make_engine(cfg)
+
+    def chunk_step(params, batch, pool_kv, tbl_row, k_pos_row, pos, clen):
+        return M.prefill_chunk_fn(params, batch, cfg, engine, pool_kv,
+                                  tbl_row, k_pos_row, pos, clen, page_size)
+
+    return chunk_step
+
+
 def make_serve_step(cfg: ModelConfig):
     engine = _make_engine(cfg)
 

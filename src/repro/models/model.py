@@ -273,6 +273,70 @@ def run_stack_prefill_prefix(params, x, batch, cfg: ModelConfig, engine,
     return x, {"layers": caches, "cur": total, "k_pos": k_pos}
 
 
+def run_stack_prefill_chunk(params, x, batch, cfg: ModelConfig, engine,
+                            pool_kv, tbl_row, k_pos_row, pos, clen,
+                            page_size: int):
+    """Resume a ragged prefill at prompt offset `pos` for ONE paged slot
+    (chunked admission: serve/engine.py interleaves these dispatches
+    with decode chunks under a token budget).
+
+    `x` embeds the chunk's tokens right-padded to S (one trace per chunk
+    bucket); `pos`/`clen` are traced scalars — the chunk covers absolute
+    positions [pos, pos + clen). `pool_kv` is the per-layer shared page
+    pool ({"k"/"v"}: [L, P, ps, KV, hd]), `tbl_row` [n] the slot's page
+    table and `k_pos_row` [n*ps] its current ring validity row (caller
+    resets it on the first chunk; a prefix-cache hit starts with the
+    shared pages' positions already marked).
+
+    Attention over "my own earlier chunks" reuses the prefix-concat path
+    in layers.py::_attn_branch: each layer gathers the slot's FULL
+    padded ring through its page table as k_pre/v_pre and lets the
+    flash mask (causal + optional sliding window + k_pos >= 0) decide
+    visibility — so no page-alignment is imposed on the chunk size, and
+    sliding-window rings work unchanged: a ring entry being overwritten
+    by this chunk (position p - W) is masked for every query that could
+    see the gathered stale value, while entries still inside some
+    query's window are gathered before the chunk's scatter touches them.
+    Chunk k/v then scatter into the pool page-by-token, pad lanes
+    redirected to the trash page; the returned validity row marks the
+    chunk's real positions (pads dropped via an out-of-bounds scatter).
+
+    Returns (x, new pool {"k","v"} stacked [L, ...], new k_pos row)."""
+    S = x.shape[1]
+    ps = page_size
+    W = tbl_row.shape[0] * ps                       # padded ring width
+    i = jnp.arange(S, dtype=jnp.int32)
+    own_pos = pos + i
+    io_template = dict(
+        positions=_positions_for(batch, cfg, S, offset=pos),
+        q_pos=own_pos,
+        k_pos=jnp.concatenate([k_pos_row,
+                               jnp.where(i < clen, own_pos, -1)]),
+    )
+    ring_slot = own_pos % W
+    w_page = jnp.where(i < clen, tbl_row[ring_slot // ps], 0)  # pads -> trash
+    w_off = ring_slot % ps
+
+    def scan_body(x, inp):
+        layer_params, pool_k, pool_v = inp
+        ring = lambda pool: pool[tbl_row].reshape((W,) + pool.shape[2:])
+        io = BlockIO(mode="prefill",
+                     cache={"k_pre": ring(pool_k), "v_pre": ring(pool_v)},
+                     **io_template)
+        x, cache, _ = apply_block(layer_params, x, io, cfg, engine)
+        new_k = pool_k.at[w_page, w_off].set(
+            cache["k"][0].astype(pool_k.dtype))
+        new_v = pool_v.at[w_page, w_off].set(
+            cache["v"][0].astype(pool_v.dtype))
+        return x, (new_k, new_v)
+
+    x, (ks, vs) = jax.lax.scan(
+        scan_body, x, (params["blocks"], pool_kv["k"], pool_kv["v"]))
+    idx = jnp.where(i < clen, ring_slot, W)         # pads: OOB -> dropped
+    new_row = k_pos_row.at[idx].set(own_pos, mode="drop")
+    return x, {"k": ks, "v": vs}, new_row
+
+
 def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
     """One-token step. x: [B,1,d]. Returns (x, new_cache).
 
@@ -300,9 +364,18 @@ def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
     W = k_pos_vec.shape[-1] if k_pos_vec is not None else 0
     slot = (cur_b % W).astype(jnp.int32) if W else jnp.zeros((B,), jnp.int32)
     tbl = cache.get("page_tbl")
+    # write-mask (paged serving only): rows with write_mask[b] == False
+    # keep their cache bit-identical — k/v writes land on the trash
+    # page, the k_pos row is untouched and cur does not advance. The
+    # chunked-prefill engine decodes while some slots are still
+    # mid-prefill; without the gate every decode step would scribble
+    # ring slots the prefill chunks have yet to fill.
+    wm = batch.get("write_mask") if tbl is not None else None
     if tbl is not None:
         ps = cache["layers"]["k"].shape[2]                 # [L,P,ps,KV,hd]
         page = jnp.take_along_axis(tbl, (slot // ps)[:, None], axis=1)[:, 0]
+        if wm is not None:
+            page = jnp.where(wm, page, 0)
         off = slot % ps
 
     if cfg.rope_kind == "mrope" and "mrope_positions" in batch:
@@ -317,8 +390,10 @@ def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
     if k_pos_vec is not None:
         kp = k_pos_vec if k_pos_vec.ndim == 2 \
             else jnp.broadcast_to(k_pos_vec[None, :], (B, W))
-        k_pos_new = jnp.where(jnp.arange(W)[None, :] == slot[:, None],
-                              cur_b[:, None], kp)                  # [B, W]
+        upd = jnp.arange(W)[None, :] == slot[:, None]
+        if wm is not None:
+            upd = upd & wm[:, None]
+        k_pos_new = jnp.where(upd, cur_b[:, None], kp)             # [B, W]
     else:
         k_pos_new = None
 
@@ -338,7 +413,8 @@ def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
 
     x, new_layer_caches = jax.lax.scan(
         scan_body, x, (params["blocks"], cache["layers"]))
-    new_cache = {"layers": new_layer_caches, "cur": cur + 1}
+    adv = 1 if wm is None else wm.astype(jnp.int32)
+    new_cache = {"layers": new_layer_caches, "cur": cur + adv}
     if k_pos_new is not None:
         new_cache["k_pos"] = k_pos_new if (per_slot or k_pos_vec.ndim == 2) \
             else k_pos_new[0]
@@ -546,6 +622,25 @@ def prefill_prefix_fn(params, batch, cfg: ModelConfig,
     last = jnp.take_along_axis(x, idx, axis=1)             # [B, 1, d]
     logits = lm_logits(params, last, cfg)[:, 0]
     return logits, cache
+
+
+def prefill_chunk_fn(params, batch, cfg: ModelConfig,
+                     engine: ActivationEngine, pool_kv, tbl_row, k_pos_row,
+                     pos, clen, page_size: int):
+    """Chunked-admission step: one chunk of one slot's prompt resumed at
+    offset `pos` (run_stack_prefill_chunk). Logits are read at the
+    chunk's last real token — only meaningful on the final chunk, where
+    the engine samples the first generated token from them."""
+    tokens = batch["tokens"]                               # [1, S]
+    x = embed_tokens(params, tokens, cfg, batch.get("patch_embeds"))
+    x, new_kv, new_row = run_stack_prefill_chunk(
+        params, x, batch, cfg, engine, pool_kv, tbl_row, k_pos_row,
+        pos, clen, page_size)
+    x = apply_norm(params["ln_f"], x, cfg)
+    idx = jnp.reshape(clen - 1, (1, 1, 1)).astype(jnp.int32)
+    last = jnp.take_along_axis(x, idx, axis=1)             # [1, 1, d]
+    logits = lm_logits(params, last, cfg)[:, 0]            # [1, V]
+    return logits, new_kv, new_row
 
 
 def decode_fn(params, batch, cache, cfg: ModelConfig, engine: ActivationEngine):

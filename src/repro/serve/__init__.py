@@ -3,12 +3,15 @@
 `ServeEngine` (engine.py) owns the device cache — a shared page pool
 with per-slot page tables by default, legacy per-slot rings via
 `EngineConfig(cache="slot")` — and the in-jit decode scan;
-`FifoScheduler` (scheduler.py) owns host-side request/slot bookkeeping
-and the prompt bucketing policy; `PagePool` (paging.py) owns page
+`TokenBudgetScheduler` (scheduler.py) owns host-side request/slot
+bookkeeping, the prompt bucketing policy, and the token-budget step
+planner that interleaves chunked prefill with decode
+(`EngineConfig(chunk_prefill=N)`); `PagePool` (paging.py) owns page
 allocation, worst-case reservations, and refcounted prefix chains.
 """
 from .engine import EngineConfig, EngineStats, ServeEngine, sample_tokens
-from .scheduler import Completion, FifoScheduler, Request, bucket_len
+from .scheduler import (Completion, FifoScheduler, Request, StepPlan,
+                        TokenBudgetScheduler, bucket_len)
 
 __all__ = [
     "Completion",
@@ -17,6 +20,8 @@ __all__ = [
     "FifoScheduler",
     "Request",
     "ServeEngine",
+    "StepPlan",
+    "TokenBudgetScheduler",
     "bucket_len",
     "sample_tokens",
 ]

@@ -36,6 +36,25 @@ without prefilling them, attending suffix queries over the cached
 pages. ``cache="slot"`` keeps the legacy one-full-ring-per-slot
 contract for A/B benchmarking.
 
+Token-budget schedule (``EngineConfig(chunk_prefill=N)``, paged
+attention archs only): instead of the phase-separated admit-then-decode
+loop above — where one whole-prompt prefill dispatch stalls every
+decoding slot for the prompt's full compute — each `step()` packs a
+fixed token budget with (a) one in-jit decode chunk over all
+decode-phase slots and (b) one prefill chunk of at most `chunk_prefill`
+prompt tokens per mid-prompt slot (scheduler.py::plan_step decides the
+split; decode is floored at one step, prefills at one token). Admission
+binds a slot and reserves pages without running any prompt tokens; the
+chunk dispatches then resume the prompt cursor from its page-table
+pages, attending over previously-written pages exactly like a prefix
+hit, and the final chunk samples the first token and arms decode state
+on device. The decode chunk is dispatched before the chunks and synced
+after them, so chunk compute overlaps the decode wait — long prompts
+cost decoding slots at most one bounded chunk of interference per
+iteration instead of a whole prompt. Greedy decode is token-identical
+to the unchunked engine; temperature>0 draws per-chunk host keys and
+diverges (documented, like drain trimming).
+
 With a mesh, every jitted step (prefill, insert, decode) carries
 explicit NamedShardings: parameters and the per-slot cache are resolved
 from their logical axes via `launch/steps.py::serve_shardings` (the same
@@ -59,8 +78,8 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.parallel import partition as part
 
-from .paging import PagePool
-from .scheduler import (Completion, FifoScheduler, Request, SlotRun,
+from .paging import PagePool, SlotPages
+from .scheduler import (Completion, Request, SlotRun, TokenBudgetScheduler,
                         bucket_len)
 
 
@@ -179,11 +198,19 @@ def make_prefix_prefill_sample(cfg: ModelConfig, n_pre: int, page_size: int,
     return prefill_sample
 
 
-def make_decode_chunk(cfg: ModelConfig, n_steps: int):
+def make_decode_chunk(cfg: ModelConfig, n_steps: int, paged: bool = False):
     """Jit-able (params, cache, state) -> (cache, state, toks [T, B]):
     `n_steps` decode steps fully on device. Rows record their sampled
     token while active and 0 afterwards; `emitted`/`active` advance so
-    the host can replay termination exactly (EOS or budget)."""
+    the host can replay termination exactly (EOS or budget).
+
+    With `paged`, `active` doubles as the step's write mask: inactive
+    rows leave their cache bit-identical (writes land on the trash
+    page, k_pos/cur frozen — model.py). For plain continuous batching
+    that is merely hygiene (a dead row's ring is fully overwritten at
+    its next insert), but the chunked-prefill schedule decodes while
+    some slots are still mid-prefill, and those slots' live page tables
+    MUST NOT be scribbled by the shared decode scan."""
     engine = steps_mod.make_engine(cfg)
 
     def chunk(params, cache, state):
@@ -191,8 +218,10 @@ def make_decode_chunk(cfg: ModelConfig, n_steps: int):
 
         def body(carry, _):
             cache, tok, key, emitted, active = carry
-            logits, cache = M.decode_fn(params, {"tokens": tok[:, None]},
-                                        cache, cfg, engine)
+            batch = {"tokens": tok[:, None]}
+            if paged:
+                batch["write_mask"] = active
+            logits, cache = M.decode_fn(params, batch, cache, cfg, engine)
             key, sub = jax.random.split(key)
             nxt = sample_tokens(sub, logits, temp)
             nxt = jnp.where(active, nxt, 0)                # pad idle rows
@@ -207,6 +236,58 @@ def make_decode_chunk(cfg: ModelConfig, n_steps: int):
         new_state = dict(state, tok=tok, key=key, emitted=emitted,
                          active=active)
         return cache, new_state, toks
+
+    return chunk
+
+
+def make_chunk_prefill(cfg: ModelConfig, page_size: int):
+    """Jit-able chunked-admission dispatch: advance ONE slot's prefill by
+    `clen` prompt tokens (models/model.py::run_stack_prefill_chunk) and,
+    on the final chunk, sample the first generated token and arm the
+    slot's decode state — all on device, with `slot/pos/clen/first/
+    final/budget/eos` traced so one compilation per chunk bucket covers
+    every slot, offset and chunk length.
+
+    (params, cache, state, batch{tokens [1, S]}, slot, pos, clen, first,
+    final, key, temp [1], budget, eos) -> (cache, state, tok0). Non-final
+    chunks return garbage tok0 (logits at a mid-prompt token) which the
+    host never syncs; the slot's `active` stays False until the final
+    chunk, so interleaved decode chunks leave its pages untouched
+    (write-mask) and its row reads as idle."""
+    step = steps_mod.make_prefill_chunk_step(cfg, page_size)
+
+    def chunk(params, cache, state, batch, slot, pos, clen, first, final,
+              key, temp, budget, eos):
+        W = cache["k_pos"].shape[1]
+        j = jnp.arange(W, dtype=jnp.int32)
+        # first chunk: forget the slot's previous occupant. A prefix hit
+        # starts at pos = prefix_len with the shared pages' positions
+        # (ring order == sequence order: prefix caching excludes sliding
+        # windows) already valid; a cold start (pos = 0) resets to -1.
+        row = jnp.where(first, jnp.where(j < pos, j, -1),
+                        cache["k_pos"][slot])
+        pool_kv = {"k": cache["layers"]["k"], "v": cache["layers"]["v"]}
+        logits, new_kv, new_row = step(params, batch, pool_kv,
+                                       cache["page_tbl"][slot], row,
+                                       pos, clen)
+        tok0 = sample_tokens(key, logits, temp)[0]
+        new_cache = dict(cache, layers=dict(cache["layers"], **new_kv),
+                         cur=cache["cur"].at[slot].set(pos + clen),
+                         k_pos=cache["k_pos"].at[slot].set(new_row))
+        new_state = dict(state)
+
+        def arm(name, val):
+            old = state[name][slot]
+            new_state[name] = state[name].at[slot].set(
+                jnp.where(final, val, old).astype(state[name].dtype))
+
+        arm("tok", tok0)
+        arm("emitted", jnp.int32(1))
+        arm("active", final & (tok0 != eos) & (budget > 1))
+        arm("budget", budget)
+        arm("temp", temp[0])
+        arm("eos", eos)
+        return new_cache, new_state, tok0
 
     return chunk
 
@@ -245,6 +326,25 @@ class EngineConfig:
     prefix_cache: bool = True   # share page-aligned common prompt
                                 # prefixes across requests (paged,
                                 # attention-only, no sliding window)
+    chunk_prefill: int = 0      # > 0: admission streams each prompt in
+                                # chunks of at most this many tokens,
+                                # interleaved with decode under the
+                                # token budget (paged attention-only
+                                # archs; others silently keep one-shot
+                                # admission, like the paged/SSM
+                                # fallback). 0 = one-shot admission.
+                                # Chunks are clamped to the padded ring
+                                # width. temperature > 0 sampling draws
+                                # a key per chunk, so it differs from
+                                # the one-shot stream (greedy decode is
+                                # token-identical).
+    token_budget: int | None = None  # per-iteration token cap for the
+                                # chunked schedule: decode steps x
+                                # decode slots + prefill chunk tokens.
+                                # None = slots * chunk + chunk_prefill
+                                # (full decode chunk + one prefill
+                                # chunk). Both sides keep a one-unit
+                                # liveness floor (scheduler.plan_step).
     seed: int = 0
 
     def __post_init__(self):
@@ -266,6 +366,16 @@ class EngineConfig:
         if self.n_pages is not None and self.n_pages < 2:
             raise ValueError(f"n_pages ({self.n_pages}) must be >= 2 "
                              "(one trash page + one usable page)")
+        if self.chunk_prefill < 0:
+            raise ValueError(f"chunk_prefill ({self.chunk_prefill}) "
+                             "must be >= 0 (0 = one-shot admission)")
+        if self.token_budget is not None:
+            if self.chunk_prefill == 0:
+                raise ValueError("token_budget only shapes the chunked "
+                                 "schedule; set chunk_prefill > 0")
+            if self.token_budget < 1:
+                raise ValueError(f"token_budget ({self.token_budget}) "
+                                 "must be >= 1")
 
 
 @dataclasses.dataclass
@@ -279,6 +389,12 @@ class EngineStats:
                                    # half of admission: untimed before,
                                    # so prefill_tokens_per_s overstated
                                    # admission throughput)
+    prefill_chunks: int = 0        # chunked admission: prefill chunk
+                                   # dispatches (non-final chunks are
+                                   # never synced, so chunked prefill_s
+                                   # counts dispatch time only — their
+                                   # compute overlaps the next decode
+                                   # sync and lands in decode_s)
     decode_s: float = 0.0
     decode_chunks: int = 0
     decode_steps: int = 0          # sum of per-chunk in-jit steps
@@ -321,17 +437,6 @@ class EngineStats:
         return self.decode_tokens / self.decode_s if self.decode_s else 0.0
 
 
-@dataclasses.dataclass
-class _SlotPages:
-    """Host-side page accounting for one occupied slot: the physical
-    pages backing its logical ring (shared prefix first), how many of
-    them are shared (refcounted, never written by this slot), and the
-    worst-case page count reserved at admission."""
-    pages: list
-    n_shared: int
-    worst: int
-
-
 class ServeEngine:
     """Continuous-batching server over one model + parameter set.
 
@@ -369,6 +474,12 @@ class ServeEngine:
         self.prefix_enabled = (self.paged and self.ecfg.prefix_cache
                                and cfg.sliding_window is None
                                and not (cfg.use_mamba or cfg.parallel_mamba))
+        # chunked prefill resumes a prompt from pages mid-stream, which
+        # needs a paged KV ring and no SSM/conv state (those depend on
+        # every earlier token each dispatch); other archs silently keep
+        # one-shot admission, mirroring the paged/SSM fallback above
+        self.chunked = (self.ecfg.chunk_prefill > 0 and self.paged
+                        and not (cfg.use_mamba or cfg.parallel_mamba))
 
         B = self.ecfg.slots
         self.mesh = mesh
@@ -392,7 +503,7 @@ class ServeEngine:
             # lazily (one upload before a chunk, no extra dispatches)
             self._tbl = np.zeros((B, self._n_per_slot), np.int32)
             self._tbl_dirty = False
-            self._slot_pages: dict[int, _SlotPages] = {}
+            self._slot_pages: dict[int, SlotPages] = {}
             cache = M.init_paged_cache(cfg, B, n_pages, ps, self.ecfg.max_len)
             prefill_capacity = self._w_pad
         else:
@@ -415,6 +526,13 @@ class ServeEngine:
 
         self._decode_fns: dict = {}    # in-jit step count -> jitted chunk
         self._prefix_fns: dict = {}    # (n_pre, suffix bucket) -> jitted fn
+        self._chunk_fns: dict = {}     # chunk bucket -> jitted chunk prefill
+        if self.chunked:
+            # a chunk wider than the padded ring would collide with its
+            # own scatter (two chunk tokens sharing a ring slot)
+            self._chunk_tokens = min(self.ecfg.chunk_prefill, self._w_pad)
+            self._token_budget = (self.ecfg.token_budget
+                                  or B * self.ecfg.chunk + self._chunk_tokens)
         if mesh is None:
             self._shardings = None
             self._small_csh = None
@@ -461,7 +579,7 @@ class ServeEngine:
                     out_shardings=(csh, ssh), donate_argnums=(0, 1))
         self._decode_at(self.ecfg.chunk)     # seed the cache per config
 
-        self.sched = FifoScheduler(B)
+        self.sched = TokenBudgetScheduler(B)
         self.stats = EngineStats()
         self.completions: list[Completion] = []
         self._uid = 0
@@ -474,7 +592,7 @@ class ServeEngine:
         distinct final remaining-budget value — typically one)."""
         fn = self._decode_fns.get(n_steps)
         if fn is None:
-            decode = make_decode_chunk(self.cfg, n_steps)
+            decode = make_decode_chunk(self.cfg, n_steps, paged=self.paged)
             if self._shardings is None:
                 fn = jax.jit(decode, donate_argnums=(1, 2))
             else:
@@ -507,6 +625,27 @@ class ServeEngine:
                                   repl, repl),
                     out_shardings=(repl, self._small_csh))
             self._prefix_fns[key] = fn
+        return fn
+
+    def _chunk_at(self, sbucket: int):
+        """The jitted chunk-prefill dispatch for a `sbucket`-padded
+        chunk, built on demand — slot, offset, length and the final-
+        chunk flags are all traced, so log2(chunk_prefill) traces cover
+        the whole chunked admission path."""
+        fn = self._chunk_fns.get(sbucket)
+        if fn is None:
+            raw = make_chunk_prefill(self.cfg, self.ecfg.page_size)
+            if self._shardings is None:
+                fn = jax.jit(raw, donate_argnums=(1, 2))
+            else:
+                psh, csh, ssh, repl = self._shardings
+                fn = jax.jit(
+                    self._under_rules(raw),
+                    in_shardings=(psh, csh, ssh, {"tokens": repl},
+                                  repl, repl, repl, repl, repl, repl,
+                                  repl, repl, repl),
+                    out_shardings=(csh, ssh, repl), donate_argnums=(1, 2))
+            self._chunk_fns[sbucket] = fn
         return fn
 
     def _under_rules(self, fn):
@@ -547,6 +686,13 @@ class ServeEngine:
         return bucket_len(length, min_bucket=self.ecfg.min_bucket,
                           max_len=self.ecfg.max_prompt_len,
                           exact=self._exact_buckets)
+
+    def _chunk_bucket(self, length: int) -> int:
+        """Padded chunk length (chunked archs are never exact-bucketed:
+        the SSM gate on `chunked` implies pow2 buckets are safe)."""
+        return bucket_len(
+            length, min_bucket=min(self.ecfg.min_bucket, self._chunk_tokens),
+            max_len=self._chunk_tokens)
 
     def _match_of(self, req: Request) -> list:
         """Cached prefix page chain for a request (possibly empty),
@@ -603,13 +749,41 @@ class ServeEngine:
                 self.sched.queue.extendleft(reversed(reqs[i:]))
                 break
             taken.append(req)
-            plans.append(_SlotPages(pages=match + new,
+            plans.append(SlotPages(pages=match + new,
                                     n_shared=len(match), worst=worst))
         return taken, plans
 
-    def _release_plan(self, sp: _SlotPages) -> None:
+    def _release_plan(self, sp: SlotPages) -> None:
         self._pool.release(sp.pages)
         self._pool.unreserve(sp.worst - len(sp.pages))
+
+    def _admit_chunked(self, slots: list, reqs: list) -> bool:
+        """Chunked admission: reserve pages and bind the slot, but run
+        ZERO prompt tokens — the prefill cursor starts past any prefix
+        hit and `_step_chunked` advances it one budgeted chunk per
+        iteration. No dispatch happens here, so (unlike one-shot
+        `_admit`) requests in one round need not share an admission
+        key."""
+        reqs, plans = self._reserve_pages(reqs)
+        if not reqs:
+            return False
+        self.stats.pages_in_use = self._pool.in_use
+        self.stats.pages_peak = self._pool.pages_peak
+        ps = self.ecfg.page_size
+        now = time.perf_counter()
+        for b, req, sp in zip(slots, reqs, plans):
+            sp.prefill_pos = sp.n_shared * ps
+            sp.prefill_done = False
+            sp.first_chunk = True
+            self._tbl[b, :len(sp.pages)] = sp.pages
+            self._tbl[b, len(sp.pages):] = 0
+            self._tbl_dirty = True
+            self.stats.prefix_hit_tokens += sp.n_shared * ps
+            self.stats.prefill_requests += 1
+            self.sched.bind(b, SlotRun(request=req, tokens=[],
+                                       admitted_at=now))
+            self._slot_pages[b] = sp
+        return True
 
     def _admit(self, slots: list, reqs: list) -> bool:
         """Admit `reqs` (same admission key) into free rows `slots[:N]`:
@@ -669,7 +843,8 @@ class ServeEngine:
         for i, (req, t, budget) in enumerate(zip(reqs, tok0, budgets)):
             if int(t) == req.eos_id or budget <= 1:
                 reason = "eos" if int(t) == req.eos_id else "length"
-                self._complete(req, [int(t)], reason, admitted_at=now)
+                self._complete(req, [int(t)], reason, admitted_at=now,
+                               token_times=[now])
                 live[i] = False
                 if plans:
                     self._release_plan(plans[i])
@@ -724,7 +899,8 @@ class ServeEngine:
                                             sp.pages[:n_full])
         for i in np.nonzero(live)[0]:
             self.sched.bind(slots[i], SlotRun(
-                request=reqs[i], tokens=[int(tok0[i])], admitted_at=now))
+                request=reqs[i], tokens=[int(tok0[i])], admitted_at=now,
+                token_times=[now]))
             if self.paged:
                 self._slot_pages[slots[i]] = plans[i]
         return True
@@ -738,6 +914,15 @@ class ServeEngine:
             # loop re-checks free slots and the (new) queue head's key
             # each round rather than iterating a fixed plan
             width = 1 if self.ecfg.admission == "serial" else len(free)
+            if self.chunked:
+                # no shared dispatch -> no admission-key constraint
+                # (constant key); page budget still gates the batch
+                reqs = self.sched.next_batch(
+                    width, lambda r: 0, cost_of=self._page_cost,
+                    budget=self._pool.available())
+                if not reqs or not self._admit_chunked(free, reqs):
+                    return
+                continue
             if self.paged:
                 reqs = self.sched.next_batch(
                     width, self._admit_key, cost_of=self._page_cost,
@@ -750,11 +935,15 @@ class ServeEngine:
                 return
 
     def _complete(self, req: Request, tokens, reason: str, *,
-                  admitted_at: float) -> None:
+                  admitted_at: float, token_times=None) -> None:
+        tt = list(token_times or ())
+        ttft = (tt[0] - req.submitted_at) if tt else 0.0
+        itl = float(np.percentile(np.diff(tt), 99.0)) if len(tt) >= 2 else 0.0
         self.completions.append(Completion(
             uid=req.uid, prompt_len=len(req.tokens), tokens=list(tokens),
             finish_reason=reason, submitted_at=req.submitted_at,
-            admitted_at=admitted_at, finished_at=time.perf_counter()))
+            admitted_at=admitted_at, finished_at=time.perf_counter(),
+            ttft_s=ttft, itl_p99_s=itl))
 
     # -- page lifecycle (paged contract only) ------------------------------
 
@@ -804,7 +993,11 @@ class ServeEngine:
     # -- decode loop -------------------------------------------------------
 
     def step(self) -> bool:
-        """Admit + one decode chunk. Returns False when nothing decoded."""
+        """One engine iteration. Chunked engines pack a token budget
+        (decode chunk + one prefill chunk per mid-prompt slot); legacy
+        engines run admit-then-decode. Returns False when idle."""
+        if self.chunked:
+            return self._step_chunked()
         self._admit_ready()
         active = self.sched.active_slots()
         if not active:
@@ -835,10 +1028,18 @@ class ServeEngine:
         self.cache, self.state, toks = decode(
             self.params, self.cache, self.state)
         toks = np.asarray(toks)                            # [T, B]; syncs
-        self.stats.decode_s += time.perf_counter() - t0
+        now = time.perf_counter()
+        self.stats.decode_s += now - t0
         self.stats.decode_chunks += 1
         self.stats.decode_steps += toks.shape[0]
+        self._harvest(active, toks, now)
+        return True
 
+    def _harvest(self, active: list, toks, now: float) -> None:
+        """Fold one synced decode chunk's tokens [T, B] into the bound
+        runs; evict + complete rows that hit EOS or their budget. All T
+        tokens become host-visible at the same sync, so they share one
+        timestamp (ITL measures chunk-sync gaps, not per-token gaps)."""
         for b in active:
             run = self.sched.slots[b]
             req = run.request
@@ -846,6 +1047,7 @@ class ServeEngine:
             for t in range(toks.shape[0]):
                 tok = int(toks[t, b])
                 run.tokens.append(tok)
+                run.token_times.append(now)
                 self.stats.decode_tokens += 1
                 if tok == req.eos_id or len(run.tokens) >= budget:
                     self.sched.evict(b)
@@ -854,8 +1056,114 @@ class ServeEngine:
                     self._complete(
                         req, run.tokens,
                         "eos" if tok == req.eos_id else "length",
-                        admitted_at=run.admitted_at)
+                        admitted_at=run.admitted_at,
+                        token_times=run.token_times)
                     break
+
+    def _step_chunked(self) -> bool:
+        """One token-budget iteration: plan decode steps + prefill
+        chunks, dispatch the decode chunk FIRST (its sync then never
+        waits on chunk compute — chunk dispatches overlap the decode
+        wait), run one chunk per mid-prompt slot, sync decode, harvest.
+
+        Final-chunk slots sample their first token on device inside the
+        chunk dispatch and flip active there, so they join the NEXT
+        iteration's decode chunk with zero extra dispatches."""
+        self._admit_ready()
+        active = self.sched.active_slots()
+        if not active:
+            return False
+        pf = [b for b in active if not self._slot_pages[b].prefill_done]
+        pf.sort(key=lambda b: self.sched.slots[b].request.uid)
+        dec = [b for b in active if self._slot_pages[b].prefill_done]
+
+        n_steps = self.ecfg.chunk
+        if dec and self.ecfg.trim_drain:
+            need = max(
+                min(run.request.max_new,
+                    self.ecfg.max_len - len(run.request.tokens))
+                - len(run.tokens)
+                for run in (self.sched.slots[b] for b in dec))
+            n_steps = max(1, min(n_steps, need))
+        plan = self.sched.plan_step(
+            budget=self._token_budget, chunk_tokens=self._chunk_tokens,
+            decode_steps=n_steps if dec else 0, n_decode=len(dec),
+            prefill_left=[
+                (b, len(self.sched.slots[b].request.tokens)
+                 - self._slot_pages[b].prefill_pos) for b in pf])
+
+        if dec:
+            self._grow_pages(dec, plan.decode_steps)
+        self._push_tbl()        # one upload covers decode AND chunks
+        toks = None
+        if dec:
+            decode = self._decode_at(plan.decode_steps)
+            t0 = time.perf_counter()
+            self.cache, self.state, toks = decode(
+                self.params, self.cache, self.state)
+
+        finals = []
+        for b, c in plan.chunks:
+            run = self.sched.slots[b]
+            req = run.request
+            sp = self._slot_pages[b]
+            pos = sp.prefill_pos
+            final = pos + c == len(req.tokens)
+            sbucket = self._chunk_bucket(c)
+            padded = np.zeros((1, sbucket), np.int32)
+            padded[0, :c] = req.tokens[pos:pos + c]
+            self._key, sub = jax.random.split(self._key)
+            gen = min(req.max_new, self.ecfg.max_len - len(req.tokens))
+            tc = time.perf_counter()
+            self.cache, self.state, tok0 = self._chunk_at(sbucket)(
+                self.params, self.cache, self.state,
+                {"tokens": jnp.asarray(padded)},
+                jnp.int32(b), jnp.int32(pos), jnp.int32(c),
+                jnp.asarray(sp.first_chunk), jnp.asarray(final), sub,
+                jnp.full((1,), req.temperature, jnp.float32),
+                jnp.int32(gen), jnp.int32(req.eos_id))
+            # dispatch-enqueue time only: chunks are never synced here,
+            # their compute overlaps the next decode sync (decode_s)
+            self.stats.prefill_s += time.perf_counter() - tc
+            self.stats.prefill_chunks += 1
+            self.stats.prefill_tokens += c
+            self.stats.prefill_padded_tokens += sbucket
+            sp.prefill_pos = pos + c
+            sp.first_chunk = False
+            if final:
+                sp.prefill_done = True
+                finals.append((b, tok0))
+
+        if toks is not None:
+            toks = np.asarray(toks)                        # [T, B]; syncs
+            now = time.perf_counter()
+            self.stats.decode_s += now - t0
+            self.stats.decode_chunks += 1
+            self.stats.decode_steps += toks.shape[0]
+            self._harvest(dec, toks, now)
+
+        ps = self.ecfg.page_size
+        for b, tok0 in finals:
+            t = int(np.asarray(tok0))
+            now = time.perf_counter()
+            run = self.sched.slots[b]
+            req = run.request
+            sp = self._slot_pages[b]
+            if self.prefix_enabled:
+                n_full = len(req.tokens) // ps
+                self._pool.register(req.tokens[:n_full * ps],
+                                    sp.pages[:n_full])
+            run.tokens.append(t)
+            run.token_times.append(now)
+            gen = min(req.max_new, self.ecfg.max_len - len(req.tokens))
+            if t == req.eos_id or gen <= 1:
+                self.sched.evict(b)
+                self._free_slot(b)
+                self._complete(
+                    req, run.tokens,
+                    "eos" if t == req.eos_id else "length",
+                    admitted_at=run.admitted_at,
+                    token_times=run.token_times)
         return True
 
     def run(self) -> list[Completion]:

@@ -23,6 +23,29 @@ chain key) only when the free list runs dry.
 from __future__ import annotations
 
 import collections
+import dataclasses
+
+
+@dataclasses.dataclass
+class SlotPages:
+    """Host-side page accounting for one occupied slot: the physical
+    pages backing its logical ring (shared prefix first), how many of
+    them are shared (refcounted, never written by this slot), and the
+    worst-case page count reserved at admission.
+
+    Chunked-prefill engines additionally track the slot's prefill
+    cursor: `prefill_pos` is the next prompt token offset to compute
+    (starts past any prefix-cache hit), `prefill_done` flips when the
+    final chunk has run, and `first_chunk` tells the dispatch to reset
+    the slot's k_pos row on device (the row still describes the
+    previous occupant until then). One-shot admission fills the whole
+    ring in a single dispatch and binds with the defaults below."""
+    pages: list
+    n_shared: int
+    worst: int
+    prefill_pos: int = 0
+    prefill_done: bool = True
+    first_chunk: bool = False
 
 
 class PagePool:

@@ -1,8 +1,10 @@
 """Host-side scheduling for the continuous-batching serve engine.
 
 Pure-Python bookkeeping, deliberately free of jax: requests, completions,
-the FIFO admission queue, and the prompt-length bucketing policy. The
-device-side counterpart (cache slots, in-jit decode) lives in engine.py.
+the FIFO admission queue, the prompt-length bucketing policy, and the
+token-budget step planner that interleaves chunked prefill with decode.
+The device-side counterpart (cache slots, in-jit decode) lives in
+engine.py.
 
 Bucketing: variable-length admission would recompile the prefill step for
 every distinct prompt length. Prompts are right-padded to power-of-two
@@ -12,6 +14,17 @@ every real token and are excluded from the KV cache by the ragged
 prefill (models/model.py), so bucketing is semantics-free for attention
 caches. SSM/conv states *are* contaminated by trailing pads, so stateful
 archs (mamba / hybrid) use exact-length buckets instead.
+
+Token-budget planning (`plan_step`): instead of the phase-separated
+admit-then-decode loop (one whole-prompt prefill dispatch stalls every
+in-flight request), each engine iteration packs a fixed token budget
+with (a) in-jit decode steps for every decode-phase slot and (b) one
+chunk of at most `chunk_tokens` prompt tokens from each prefill-phase
+slot. Decode is never skipped (tail latency is the point), but when
+prefills are in flight the planner reserves their chunk allowance
+*before* sizing the decode chunk, so a generous budget cannot be eaten
+entirely by decode and starve admission-in-progress — and symmetrically
+a tiny budget still decodes at least one step.
 """
 from __future__ import annotations
 
@@ -59,6 +72,12 @@ class Completion:
     submitted_at: float = 0.0
     admitted_at: float = 0.0
     finished_at: float = 0.0
+    ttft_s: float = 0.0     # submit -> first token visible on host
+    itl_p99_s: float = 0.0  # p99 gap between consecutive harvested
+                            # tokens (0.0 with < 2 tokens); measured at
+                            # chunk-sync granularity, which is exactly
+                            # where a competing prefill dispatch stalls
+                            # a decoding slot
 
     @property
     def latency_s(self) -> float:
@@ -75,10 +94,24 @@ class SlotRun:
     request: Request
     tokens: list            # generated so far (host copy)
     admitted_at: float
+    # host-visible timestamp per harvested token (one per chunk sync for
+    # every token the chunk emitted) — the raw series behind ttft/ITL
+    token_times: list = dataclasses.field(default_factory=list)
 
 
-class FifoScheduler:
-    """FIFO admission over a fixed set of decode slots."""
+@dataclasses.dataclass
+class StepPlan:
+    """One engine iteration's worth of work under the token budget."""
+    decode_steps: int       # in-jit steps for the shared decode chunk
+    chunks: list            # [(slot, n_tokens)] prefill chunks, FIFO order
+    spare: int              # budget left unpacked (informational)
+
+
+class TokenBudgetScheduler:
+    """FIFO admission over a fixed set of decode slots, plus the
+    token-budget packing policy for chunked-prefill engines (the class
+    was `FifoScheduler` while admission and decode were separate
+    phases; the alias below keeps the old name importable)."""
 
     def __init__(self, n_slots: int):
         self.queue: collections.deque[Request] = collections.deque()
@@ -142,6 +175,45 @@ class FifoScheduler:
         self.queue.extendleft(reversed(skipped))
         return taken
 
+    def plan_step(self, *, budget: int, chunk_tokens: int,
+                  decode_steps: int, n_decode: int,
+                  prefill_left: list) -> StepPlan:
+        """Pack one engine iteration: `n_decode` decode-phase slots (one
+        token per slot per in-jit step, up to `decode_steps` steps) and
+        `prefill_left` = [(slot, remaining_prompt_tokens)] in admission
+        order, each taking a chunk of at most `chunk_tokens`.
+
+        Decode comes first in the schedule — a decoding slot is never
+        skipped for a new prefill chunk — but in-flight prefills get
+        their chunk allowance *reserved* before the decode chunk is
+        sized, so decode cannot absorb the entire budget and stall
+        admission (which would just recreate, over more steps, the
+        phase-separated behavior this planner replaces). Both sides are
+        floored at one unit of progress per iteration, so no slot ever
+        starves regardless of how tight the budget is."""
+        if chunk_tokens < 1:
+            raise ValueError(f"chunk_tokens ({chunk_tokens}) must be >= 1")
+        want = [(slot, min(chunk_tokens, max(left, 0)))
+                for slot, left in prefill_left if left > 0]
+        steps = 0
+        if n_decode > 0 and decode_steps > 0:
+            for_decode = budget - sum(n for _, n in want)
+            steps = max(1, min(decode_steps, for_decode // n_decode))
+            budget -= n_decode * steps
+        chunks = []
+        for slot, n in want:
+            n = min(n, max(budget, 0))
+            if n < 1:
+                # liveness floor: an in-flight prefill always advances
+                # at least one token per iteration, even when decode
+                # (at its own floor) already overflowed the budget
+                n = 1 if not chunks else 0
+            if n:
+                chunks.append((slot, n))
+                budget -= n
+        return StepPlan(decode_steps=steps, chunks=chunks,
+                        spare=max(budget, 0))
+
     def bind(self, slot: int, run: SlotRun) -> None:
         assert self.slots[slot] is None, f"slot {slot} busy"
         self.slots[slot] = run
@@ -155,3 +227,8 @@ class FifoScheduler:
     @property
     def pending(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)
+
+
+# Phase-separated engines (PR 2-5) imported the scheduler under this
+# name; the object is the same, only the planning surface grew.
+FifoScheduler = TokenBudgetScheduler

@@ -1,0 +1,244 @@
+"""Token-budget scheduler + chunked prefill tests.
+
+The chunked schedule's guarantee mirrors the paged one: interleaving is
+INVISIBLE to the decoded tokens. Splitting a prompt into budgeted
+chunks that run between decode chunks is a pure scheduling change, so a
+greedy workload served chunked emits token-for-token what the one-shot
+engine emits — including sliding-window rings that wrap, chunk cursors
+that cross page boundaries mid-prompt, and prefix-cache hits that start
+the cursor mid-prompt. On top of that sit the planner's own
+invariants: decode is never skipped, in-flight prefills always advance,
+and neither side can absorb the whole budget.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import model as M
+from repro.serve import EngineConfig, ServeEngine, TokenBudgetScheduler
+
+# chunked prefill requires the paged contract: attention archs with
+# distinct position schemes (rope / mrope) and a sliding-window mix
+CHUNKED_ARCHS = ["qwen3-0.6b", "qwen2-vl-2b", "mixtral-8x22b"]
+
+
+def setup(arch, **cfg_over):
+    cfg = registry.get(arch, smoke=True)
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    params, _ = M.materialize_params(cfg, seed=0)
+    return cfg, params
+
+
+def make_prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, (int(n),)).astype(np.int32)
+            for n in lens]
+
+
+def serve(cfg, params, prompts, gen, *, max_prompt=32, **ecfg_kw):
+    ecfg_kw.setdefault("slots", 2)
+    ecfg_kw.setdefault("chunk", 4)
+    ecfg_kw.setdefault("page_size", 5)
+    eng = ServeEngine(cfg, params, EngineConfig(
+        max_prompt_len=max_prompt, max_len=max_prompt + gen, **ecfg_kw))
+    for p in prompts:
+        eng.submit(p, max_new=gen)
+    return eng.run(), eng
+
+
+def token_streams(done):
+    return {c.uid: c.tokens for c in done}
+
+
+class TestPlanStep:
+    def plan(self, **kw):
+        kw.setdefault("budget", 32)
+        kw.setdefault("chunk_tokens", 8)
+        kw.setdefault("decode_steps", 4)
+        return TokenBudgetScheduler(4).plan_step(**kw)
+
+    def test_decode_never_skipped(self):
+        """Even a budget too small for one decode pass floors at one
+        in-jit step — tail latency beats budget accounting."""
+        p = self.plan(budget=1, n_decode=3,
+                      prefill_left=[(0, 20)])
+        assert p.decode_steps == 1
+        assert p.chunks == [(0, 1)]        # prefill liveness floor too
+
+    def test_prefill_reserved_before_decode_sized(self):
+        """A generous budget must not be eaten entirely by decode while
+        prefills wait — their chunk allowance comes off the top."""
+        p = self.plan(budget=16, chunk_tokens=8, decode_steps=100,
+                      n_decode=2, prefill_left=[(1, 30)])
+        # 8 reserved for the chunk, 8 left -> 4 decode steps of 2 slots
+        assert p.decode_steps == 4
+        assert p.chunks == [(1, 8)]
+        assert p.spare == 0
+
+    def test_chunks_fifo_and_capped(self):
+        p = self.plan(budget=100, n_decode=0,
+                      prefill_left=[(2, 30), (0, 3), (1, 9)])
+        assert p.chunks == [(2, 8), (0, 3), (1, 8)]   # admission order kept
+
+    def test_decode_steps_capped_by_chunk(self):
+        p = self.plan(budget=10_000, decode_steps=4, n_decode=2,
+                      prefill_left=[])
+        assert p.decode_steps == 4
+        assert p.spare == 10_000 - 8
+
+    def test_tight_budget_still_advances_first_prefill(self):
+        """Decode at its floor may already overflow the budget; the
+        first prefill still gets one token (liveness), the rest wait."""
+        p = self.plan(budget=2, chunk_tokens=8, decode_steps=4, n_decode=4,
+                      prefill_left=[(0, 10), (1, 10)])
+        assert p.decode_steps == 1
+        assert p.chunks == [(0, 1)]
+
+    def test_rejects_bad_chunk_tokens(self):
+        with pytest.raises(ValueError, match="chunk_tokens"):
+            self.plan(budget=8, chunk_tokens=0, n_decode=0, prefill_left=[])
+
+
+class TestChunkedIdentity:
+    @pytest.mark.parametrize("arch", CHUNKED_ARCHS)
+    def test_chunked_matches_one_shot(self, arch):
+        """Greedy A/B across position schemes; mixtral generates far
+        enough that its sliding-window ring wraps mid-decode."""
+        cfg, params = setup(arch)
+        gen = 40 if arch == "mixtral-8x22b" else 12
+        prompts = make_prompts(cfg, [9, 23, 5, 17], seed=1)
+        base, _ = serve(cfg, params, prompts, gen)
+        chunked, eng = serve(cfg, params, prompts, gen, chunk_prefill=7)
+        assert eng.chunked and eng.stats.prefill_chunks > 0
+        if arch == "mixtral-8x22b":
+            assert max(len(p) for p in prompts) + gen > eng._w_pad, \
+                "workload must wrap the sliding-window ring"
+        assert token_streams(chunked) == token_streams(base)
+
+    def test_cursor_crosses_page_boundaries(self):
+        """chunk=7 over page_size=5: every chunk write straddles a page
+        boundary and the final chunk is a 2-token remainder."""
+        cfg, params = setup("qwen3-0.6b")
+        prompts = make_prompts(cfg, [23], seed=2)
+        base, _ = serve(cfg, params, prompts, 8, slots=1)
+        chunked, eng = serve(cfg, params, prompts, 8, slots=1,
+                             chunk_prefill=7)
+        assert eng.stats.prefill_chunks == 4          # 7 + 7 + 7 + 2
+        assert token_streams(chunked) == token_streams(base)
+
+    def test_prefix_hit_starts_cursor_mid_prompt(self):
+        """A prefix-cache hit admits the cursor past the shared pages;
+        the remaining chunks attend over cached pages they never wrote."""
+        cfg, params = setup("qwen3-0.6b")
+        rng = np.random.RandomState(3)
+        shared = rng.randint(0, cfg.vocab_size, (12,)).astype(np.int32)
+        prompts = [np.concatenate(
+            [shared, rng.randint(0, cfg.vocab_size, (n,)).astype(np.int32)])
+            for n in [6, 9, 3]]
+        base, _ = serve(cfg, params, prompts, 10, prefix_cache=True)
+        chunked, eng = serve(cfg, params, prompts, 10, prefix_cache=True,
+                             chunk_prefill=7)
+        assert eng.stats.prefix_hit_tokens > 0
+        assert token_streams(chunked) == token_streams(base)
+
+    def test_single_chunk_prompts(self):
+        """Prompts at or under chunk_prefill take exactly one (final)
+        chunk each — the degenerate schedule still matches."""
+        cfg, params = setup("qwen3-0.6b")
+        prompts = make_prompts(cfg, [3, 7, 1], seed=4)
+        base, _ = serve(cfg, params, prompts, 6)
+        chunked, eng = serve(cfg, params, prompts, 6, chunk_prefill=16)
+        assert eng.stats.prefill_chunks == 3
+        assert token_streams(chunked) == token_streams(base)
+
+    def test_tiny_token_budget_still_drains(self):
+        """The planner's liveness floors mean even a budget of 1 token
+        per iteration serves the whole workload to identical tokens."""
+        cfg, params = setup("qwen3-0.6b")
+        prompts = make_prompts(cfg, [9, 14, 6], seed=5)
+        base, _ = serve(cfg, params, prompts, 8)
+        chunked, eng = serve(cfg, params, prompts, 8, chunk_prefill=4,
+                             token_budget=1)
+        assert token_streams(chunked) == token_streams(base)
+
+    def test_chunked_requires_paged_attention(self):
+        """SSM archs silently keep one-shot admission (chunk resumption
+        needs a paged KV ring, not a running state)."""
+        cfg, params = setup("falcon-mamba-7b")
+        prompts = make_prompts(cfg, [9], seed=6)
+        done, eng = serve(cfg, params, prompts, 6, slots=1, chunk_prefill=4)
+        assert not eng.chunked and eng.stats.prefill_chunks == 0
+        assert len(done) == 1
+
+
+class TestLatencyMetrics:
+    def test_ttft_and_itl_populated(self):
+        cfg, params = setup("qwen3-0.6b")
+        prompts = make_prompts(cfg, [9, 23], seed=7)
+        for kw in ({}, {"chunk_prefill": 7}):
+            done, _ = serve(cfg, params, prompts, 8, **kw)
+            for c in done:
+                assert c.ttft_s > 0.0, kw
+                assert c.itl_p99_s > 0.0, kw          # gen 8 > 1 token
+                assert c.ttft_s <= c.latency_s
+
+    def test_interleaving_keeps_decode_advancing(self):
+        """Under the token budget a decoding request keeps emitting
+        while a long prompt prefills: the short request must finish
+        before the long one despite the long prompt's arrival."""
+        cfg, params = setup("qwen3-0.6b")
+        rng = np.random.RandomState(8)
+        short = rng.randint(0, cfg.vocab_size, (4,)).astype(np.int32)
+        long = rng.randint(0, cfg.vocab_size, (30,)).astype(np.int32)
+        eng = ServeEngine(cfg, params, EngineConfig(
+            slots=2, chunk=2, max_prompt_len=32, max_len=64,
+            page_size=5, chunk_prefill=2, token_budget=4))
+        eng.submit(short, max_new=6)
+        eng.submit(long, max_new=2)
+        done = {c.uid: c for c in eng.run()}
+        assert done[0].finished_at < done[1].finished_at
+        assert len(done[0].tokens) == 6 and len(done[1].tokens) == 2
+
+
+class TestServeBatchRouting:
+    def test_explicit_capacity_stays_on_engine(self, monkeypatch):
+        """capacity= used to silently reroute to the python loop (no
+        batching, mesh refused); it must now size the engine instead."""
+        from repro.launch import serve as serve_mod
+        cfg, params = setup("qwen3-0.6b")
+        monkeypatch.setattr(
+            serve_mod, "_serve_batch_python",
+            lambda *a, **k: pytest.fail("capacity routed to python loop"))
+        prompts = np.asarray(make_prompts(cfg, [12, 12], seed=9))
+        base, _ = serve_mod.serve_batch(cfg, params, prompts, 6)
+        toks, _ = serve_mod.serve_batch(cfg, params, prompts, 6,
+                                        capacity=12 + 6 + 8)
+        np.testing.assert_array_equal(np.asarray(toks), np.asarray(base))
+
+    def test_capacity_too_small_rejected(self):
+        from repro.launch.serve import serve_batch
+        cfg, params = setup("qwen3-0.6b")
+        prompts = np.asarray(make_prompts(cfg, [12], seed=9))
+        with pytest.raises(ValueError, match="capacity"):
+            serve_batch(cfg, params, prompts, 6, capacity=10)
+
+    def test_chunk_prefill_threads_through(self):
+        from repro.launch.serve import serve_batch
+        cfg, params = setup("qwen3-0.6b")
+        prompts = np.asarray(make_prompts(cfg, [12, 12], seed=10))
+        base, _ = serve_batch(cfg, params, prompts, 6)
+        toks, _ = serve_batch(cfg, params, prompts, 6, chunk_prefill=5)
+        np.testing.assert_array_equal(np.asarray(toks), np.asarray(base))
+
+
+class TestEngineConfigValidation:
+    def test_token_budget_requires_chunk_prefill(self):
+        with pytest.raises(ValueError, match="token_budget"):
+            EngineConfig(token_budget=8)
+
+    def test_negative_chunk_prefill_rejected(self):
+        with pytest.raises(ValueError, match="chunk_prefill"):
+            EngineConfig(chunk_prefill=-1)

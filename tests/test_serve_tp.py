@@ -60,6 +60,17 @@ with part.axis_rules(mesh):
 assert np.array_equal(np.asarray(slot_tokens), outs[2]), (
     "TP=2 slot cache diverged from TP=2 paged",
     np.asarray(slot_tokens).tolist(), outs[2].tolist())
+
+# the token-budget schedule (chunked prefill) must also be a pure
+# scheduling change under TP: same workload, chunked at TP=2, equals
+# the one-shot TP results
+mesh = make_host_mesh(1, 2)
+with part.axis_rules(mesh):
+    chunked_tokens, _ = serve_batch(cfg, params, prompts, 8, mesh=mesh,
+                                    chunk_prefill=4)
+assert np.array_equal(np.asarray(chunked_tokens), outs[2]), (
+    "TP=2 chunked prefill diverged from TP=2 one-shot",
+    np.asarray(chunked_tokens).tolist(), outs[2].tolist())
 print("TP-IDENTITY-OK")
 """
 
