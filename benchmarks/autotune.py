@@ -1,0 +1,126 @@
+"""Per-layer approximant autotuner benchmark (CI artifact + PASS gate).
+
+Runs the gatecount-driven autotuner (core/autotune.py) against a real
+trained smoke model: train once under the uniform paper baseline
+(CR spline depth 64, Q2.13, bit-accurate fixed datapath), then
+coordinate-descent over the scheme x depth x Q-format candidate grid,
+minimizing the summed per-layer NAND2 gate count subject to the eval
+loss staying equal-or-better than the uniform baseline.
+
+PASS gates: the tuned assignment must (a) cover every layer, (b) reach
+equal-or-better eval loss than uniform cr_spline depth-64, and
+(c) spend STRICTLY fewer summed gates — i.e. the per-layer machinery
+must buy real area on a real model, not just in isolation. Only
+deterministic metrics (gates, per-layer max error, assignment size)
+are gated by check_regression; losses and wall-clock are carried for
+humans.
+
+    PYTHONPATH=src python -m benchmarks.autotune            # full grid
+    PYTHONPATH=src python -m benchmarks.autotune --reduced  # CI smoke
+    PYTHONPATH=src python -m benchmarks.autotune --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.configs import registry
+from repro.core import autotune as at
+
+ARCH = "olmo-1b"
+TRAIN = dict(batch=8, seq=64)
+
+
+def run(verbose: bool = True, reduced: bool = False,
+        json_path: str | None = None, steps: int | None = None,
+        seed: int = 0) -> dict:
+    steps = steps if steps is not None else (40 if reduced else 120)
+    say = print if verbose else (lambda *_: None)
+    base = registry.get(ARCH, smoke=True)
+    cfg = dataclasses.replace(base, activation=at.BASELINE_ACT)
+    say(f"\n== Per-layer approximant autotuner ({cfg.name}, "
+        f"{cfg.n_layers} layers, {steps} train steps, "
+        f"{'reduced' if reduced else 'full'} grid) ==")
+    params = at.train_smoke(cfg, steps=steps, seed=seed, **TRAIN)
+    eval_fn = at.make_eval_fn(cfg, params, **TRAIN)
+    grid = at.REDUCED_GRID if reduced else at.FULL_GRID
+    candidates = at.candidate_grid(grid)
+    baseline = at.candidate_of(at.BASELINE_ACT)
+    res = at.greedy_assign(eval_fn, cfg.n_layers, candidates, baseline,
+                           log=say if verbose else None)
+
+    rows = [dict(layer=i, **c.row()) for i, c in enumerate(res.assignment)]
+    checks = []
+    if len(res.assignment) != cfg.n_layers:
+        checks.append(f"assignment covers {len(res.assignment)} of "
+                      f"{cfg.n_layers} layers")
+    if not (res.loss <= res.base_loss):
+        checks.append(f"tuned loss {res.loss:.6f} worse than uniform "
+                      f"cr_spline depth-64 baseline {res.base_loss:.6f}")
+    if not (res.gates < res.base_gates):
+        checks.append(f"tuned assignment spends {res.gates:.0f} gates, "
+                      f"not strictly fewer than the uniform baseline's "
+                      f"{res.base_gates:.0f}")
+    for r in rows:
+        if not np.isfinite([r["gates"], r["max_err"]]).all():
+            checks.append(f"unpopulated metrics in layer {r['layer']}: {r}")
+
+    status = "PASS" if not checks else "FAIL"
+    result = {
+        "arch": cfg.name, "n_layers": cfg.n_layers, "train_steps": steps,
+        "reduced": reduced,
+        "baseline": dict(res.baseline.row(), loss=res.base_loss,
+                         summed_gates=round(res.base_gates)),
+        "assignment": rows,
+        "tuned": {"loss": res.loss, "gates": round(res.gates),
+                  "gates_saved_frac": 1.0 - res.gates / res.base_gates},
+        "grid_size": len(candidates), "evals": res.evals,
+        "history": res.history, "checks": checks, "status": status,
+    }
+
+    if verbose:
+        print(f"\n{'layer':>5} {'tag':>22} {'scheme':>10} {'depth':>5} "
+              f"{'qfmt':>6} | {'max err':>9} | {'gates':>6}")
+        for r in rows:
+            print(f"{r['layer']:5d} {r['tag']:>22} {r['scheme']:>10} "
+                  f"{r['depth']:5d} {r['qformat']:>6} | "
+                  f"{r['max_err']:9.6f} | {r['gates']:6d}")
+        print(f"summed gates {res.gates:.0f} vs uniform "
+              f"{res.baseline.tag} {res.base_gates:.0f} "
+              f"({100 * (1 - res.gates / res.base_gates):.0f}% saved); "
+              f"loss {res.loss:.6f} vs {res.base_loss:.6f} "
+              f"({res.evals} assignments evaluated)")
+        for c in checks:
+            print("  CHECK FAILED:", c)
+        print(f"autotune: {status}")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--reduced", action="store_true",
+                   help="CI smoke: smaller grid, fewer train steps")
+    p.add_argument("--json", nargs="?", const="-", default=None,
+                   help="emit JSON (to stdout, or to the given path)")
+    p.add_argument("--steps", type=int, default=None,
+                   help="train steps before tuning (default 120/40)")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+    to_file = args.json if args.json not in (None, "-") else None
+    result = run(verbose=args.json != "-", reduced=args.reduced,
+                 json_path=to_file, steps=args.steps, seed=args.seed)
+    if args.json == "-":
+        print(json.dumps(result, indent=2))
+    if result["status"] != "PASS":
+        raise SystemExit("autotune: FAIL")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,8 +15,8 @@ counts). Raw wall-clock numbers are carried in the JSONs for humans but
 deliberately NOT gated — CI machines differ too much run to run. Both
 files must also agree the run PASSed its own internal gates.
 
-The benchmark kind (serve / kernel / dse) is inferred from the JSON's
-shape, so the same entry point gates all three artifacts. A metric
+The benchmark kind (serve / kernel / dse / autotune) is inferred from
+the JSON's shape, so the same entry point gates all four artifacts. A metric
 present only in the fresh run is new coverage and is ignored; a
 baseline metric missing from the fresh run is a coverage loss and
 fails. A missing baseline file passes with a warning (bootstrap: the
@@ -31,6 +31,8 @@ import sys
 
 
 def _kind(doc: dict) -> str:
+    if "assignment" in doc:
+        return "autotune"
     if "capacity_sweep" in doc:
         return "serve"
     if "pareto" in doc:
@@ -67,6 +69,16 @@ def _metrics(doc: dict) -> dict:
         for r in doc["mlp"]:
             out[f"err.{r['kernel']}.{r['shape']}"] = (r["max_abs_err"],
                                                       "lower")
+    elif kind == "autotune":
+        # deterministic autotuner metrics only: summed gates of the
+        # tuned assignment, per-layer fixed-datapath max error, and the
+        # assignment size (a shrinking assignment is a coverage loss).
+        # Losses are NOT gated — they depend on the training run.
+        out["tuned.gates"] = (doc["tuned"]["gates"], "lower")
+        out["assignment.layers"] = (len(doc["assignment"]), "higher")
+        for r in doc["assignment"]:
+            out[f"max_err.layer{r['layer']}"] = (r["max_err"], "lower")
+            out[f"gates.layer{r['layer']}"] = (r["gates"], "lower")
     else:  # dse
         for r in doc["rows"]:
             key = f"{r['scheme']}.d{r['depth']}.g{r['degree']}.{r['qformat']}"

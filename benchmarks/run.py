@@ -11,6 +11,8 @@ Benches:
     kernel_bench    Pallas kernel vs oracle timings + VMEM budget
     dse             approximant design-space explorer: error x gates x
                     wall-time per scheme, Pareto frontier
+    autotune        gatecount-driven per-layer approximant assignment
+                    vs the uniform CR depth-64 baseline
     roofline_table  §Roofline summary from the dry-run artifacts
     serve_bench     continuous-batching engine: scan-vs-python decode,
                     offered-load sweep (p50/p99 latency)
@@ -20,8 +22,8 @@ from __future__ import annotations
 import sys
 import time
 
-from . import (activations, dse, kernel_bench, roofline_table, serve_bench,
-               table1_2, table3)
+from . import (activations, autotune, dse, kernel_bench, roofline_table,
+               serve_bench, table1_2, table3)
 
 
 def _roofline_both():
@@ -38,6 +40,7 @@ BENCHES = {
     "activations": lambda: activations.run(),
     "kernel_bench": lambda: kernel_bench.run(),
     "dse": lambda: dse.run(),
+    "autotune": lambda: autotune.run(),
     "roofline_table": _roofline_both,
     "serve_bench": lambda: serve_bench.run(),
 }

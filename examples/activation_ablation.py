@@ -16,6 +16,12 @@ registered scheme (pwl | poly | rational | cr_spline) or ``all`` to
 train under that scheme's engine too, and to print the per-scheme
 error/gates table (Q2.13 qout datapath + NAND2 model) next to the
 existing CR rows before training starts.
+
+``--per-layer`` runs the gatecount-driven autotuner instead
+(core/autotune.py): train once under the uniform CR depth-64 fixed
+baseline, search the scheme x depth x Q-format grid per layer, and
+print the tuned assignment (layer -> scheme / depth / Q format /
+max err / gates) next to the uniform baselines it must beat.
 """
 import argparse
 import dataclasses
@@ -73,6 +79,44 @@ def scheme_table(schemes):
     print()
 
 
+def per_layer_table(args):
+    """Autotune a per-layer assignment on a freshly trained smoke model
+    and print it against the uniform baselines (the autotuner's PASS
+    contract: equal-or-better loss at strictly fewer summed gates)."""
+    from repro.core import autotune as at
+    base = registry.get("olmo-1b", smoke=True)
+    cfg = dataclasses.replace(base, activation=at.BASELINE_ACT)
+    print(f"[per-layer] training {cfg.name} under uniform "
+          f"{at.BASELINE_ACT.tag()} ({args.steps} steps)")
+    params = at.train_smoke(cfg, steps=args.steps, batch=args.batch,
+                            seq=args.seq)
+    eval_fn = at.make_eval_fn(cfg, params, batch=args.batch, seq=args.seq)
+    candidates = at.candidate_grid(at.FULL_GRID)
+    baseline = at.candidate_of(at.BASELINE_ACT)
+    res = at.greedy_assign(eval_fn, cfg.n_layers, candidates, baseline,
+                           log=print)
+
+    uni32 = at.candidate_of(dataclasses.replace(at.BASELINE_ACT, depth=32))
+    print(f"\n{'layer':>5} {'tag':>22} {'scheme':>10} {'depth':>5} "
+          f"{'qfmt':>6} | {'max err':>9} | {'gates':>6}")
+    for i, c in enumerate(res.assignment):
+        r = c.row()
+        print(f"{i:5d} {r['tag']:>22} {r['scheme']:>10} {r['depth']:5d} "
+              f"{r['qformat']:>6} | {r['max_err']:9.6f} | {r['gates']:6d}")
+    n = cfg.n_layers
+    for name, cand, loss in (
+            ("uniform cr_fixed-d64", baseline, res.base_loss),
+            ("uniform cr_fixed-d32", uni32,
+             eval_fn((uni32.act,) * n)),
+            ("autotuned", None, res.loss)):
+        gates = res.gates if cand is None else cand.gates * n
+        print(f"{name:>22}: loss {loss:.6f}  summed gates {gates:8.0f}")
+    assert res.loss <= res.base_loss and res.gates < res.base_gates, \
+        "autotuned assignment must match the uniform baseline's loss " \
+        "at strictly fewer gates"
+    print("[per-layer] autotuned assignment beats the uniform baseline; OK")
+
+
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--steps", type=int, default=80)
@@ -81,7 +125,13 @@ def main():
     p.add_argument("--method", default=None,
                    help="also sweep a registered approximant scheme "
                         "(pwl|poly|rational|cr_spline) or 'all'")
+    p.add_argument("--per-layer", action="store_true",
+                   help="autotune a per-layer assignment and print it "
+                        "against the uniform baselines")
     args = p.parse_args()
+    if args.per_layer:
+        per_layer_table(args)
+        return
 
     base = registry.get("olmo-1b", smoke=True)
     engines = {

@@ -99,6 +99,56 @@ class ActivationConfig:
             return f"{self.impl}-d{self.depth}-g{self.degree}{q}"
         return f"{self.impl}-d{self.depth}{q}"
 
+    @classmethod
+    def from_tag(cls, tag: str, **overrides) -> "ActivationConfig":
+        """Parse a ``tag()`` string back into a config (the per-layer
+        assignment / autotuner wire format). x_max is not encoded in
+        tags — pass it via ``overrides`` when non-default."""
+        parts = tag.split("-")
+        kw: dict = {"impl": parts[0]}
+        for p in parts[1:]:
+            if p[:1] == "d" and p[1:].isdigit():
+                kw["depth"] = int(p[1:])
+            elif p[:1] == "g" and p[1:].isdigit():
+                kw["degree"] = int(p[1:])
+            elif p[:1] == "q" and "." in p:
+                ib, fb = p[1:].split(".", 1)
+                kw["int_bits"], kw["frac_bits"] = int(ib), int(fb)
+            else:
+                raise ValueError(f"unparseable activation tag part {p!r} "
+                                 f"in {tag!r}")
+        kw.update(overrides)
+        return cls(**kw)
+
+
+def tanh_spec_of(cfg: ActivationConfig) -> approximant.ApproxSpec | None:
+    """The tanh ApproxSpec whose params are this config's trainable
+    leaf (None for non-approximant backends, which have no trainable
+    parameters). ``<scheme>_fixed`` impls resolve to the base scheme:
+    their trainable leaf is the f32 params, requantized on the fly."""
+    scheme = scheme_of(cfg.impl) or fixed_scheme_of(cfg.impl)
+    if scheme is None:
+        return None
+    return approximant.spec_for(scheme, "tanh", x_max=cfg.x_max,
+                                depth=cfg.depth, degree=cfg.degree,
+                                int_bits=cfg.int_bits,
+                                frac_bits=cfg.frac_bits)
+
+
+def init_act_params(layer_cfgs) -> dict[str, np.ndarray]:
+    """tag -> built f32 tanh params for every distinct trainable config
+    in a per-layer assignment — the ``params["act"]`` subtree of the
+    model pytree (frozen by default; ``--train-act`` unfreezes). Only
+    the tanh target is trainable; the softplus residual stays a cached
+    constant (the rational scheme has no softplus build at all)."""
+    out: dict[str, np.ndarray] = {}
+    for c in layer_cfgs:
+        spec = tanh_spec_of(c)
+        if spec is not None and c.tag() not in out:
+            out[c.tag()] = np.asarray(approximant.params_for(spec, "tanh"),
+                                      np.float32)
+    return out
+
 
 # --------------------------------------------------------------------------
 # table caches (host-side numpy; hashable by (fn, x_max, depth))
@@ -128,19 +178,25 @@ def softplus_residual_table(x_max: float, depth: int) -> cr.SplineTable:
 # tanh backends
 # --------------------------------------------------------------------------
 
-def _kernel_act(name: str, x, cfg: ActivationConfig):
+def _kernel_act(name: str, x, cfg: ActivationConfig, params=None):
     """One-pallas_call dispatch: the whole epilogue (identity wiring and
     all) runs inside the kernel — no extra element-wise jnp passes. The
     scheme comes from the engine impl; the CR route stays byte-identical
-    to the pre-registry table path."""
+    to the pre-registry table path. ``params`` (a traced f32 array from
+    the model pytree) overrides the registry-built tanh params — the
+    softplus epilogue reads its own residual table and never takes the
+    override."""
     from repro.kernels import epilogue as epi  # lazy: avoid cycle
     from repro.kernels import ops as kernel_ops
     scheme = scheme_of(cfg.impl)
+    if name == "softplus":
+        params = None
     if scheme == "cr_spline":
         return kernel_ops.act(x, name,
-                              table=epi.table_for(name, cfg.x_max, cfg.depth))
+                              table=epi.table_for(name, cfg.x_max, cfg.depth),
+                              params=params)
     return kernel_ops.act(x, name, method=scheme, depth=cfg.depth,
-                          x_max=cfg.x_max, degree=cfg.degree)
+                          x_max=cfg.x_max, degree=cfg.degree, params=params)
 
 
 def _approx_spec(cfg: ActivationConfig, act: str) -> approximant.ApproxSpec:
@@ -200,6 +256,39 @@ def _make_tanh_scheme_fixed(cfg: ActivationConfig):
         return y, dy
 
     return tanh_fixed
+
+
+def _make_tanh_fixed_bound(cfg: ActivationConfig, act_params):
+    """Bound quantization-aware ``<scheme>_fixed`` backend: the integer
+    ROM is requantized from the (possibly trained) f32 params on every
+    call, so the bit-accurate datapath tracks training, while the
+    straight-through JVP differentiates the scheme's float block through
+    BOTH x and the params — fine-tuning against the exact circuit.
+    ``cr_fixed`` routes here too (its scheme resolves to ``cr_spline``,
+    whose ``fixed_block`` IS ``catmull_rom.interpolate_fixed``)."""
+    spec = tanh_spec_of(cfg)
+    fmt = spec.qformat
+
+    @jax.custom_jvp
+    def tanh_fixed(x, p):
+        orig = x.dtype
+        xq = quantize(x.astype(jnp.float32), fmt)
+        yq = approximant.fixed_block(xq, approximant.requantize(p, spec),
+                                     spec)
+        return dequantize(yq, fmt).astype(orig)
+
+    @tanh_fixed.defjvp
+    def _jvp(primals, tangents):
+        (x, p), (dx, dp) = primals, tangents
+        y = tanh_fixed(x, p)
+        # straight-through: derivative of the scheme's float datapath,
+        # through the input AND the trainable params
+        ref = lambda v, q: approximant.block(
+            v.astype(jnp.float32), q, spec).astype(v.dtype)
+        dy = jax.jvp(ref, (x, p), (dx, dp))[1]
+        return y, dy
+
+    return lambda x: tanh_fixed(x, act_params)
 
 
 def _make_tanh_cr_fixed(cfg: ActivationConfig):
@@ -291,11 +380,15 @@ class ActivationEngine:
     """Configured set of nonlinearities. Instances are cheap; tables are
     cached globally. Use as: ``act = ActivationEngine(cfg); act.silu(x)``."""
 
-    def __init__(self, cfg: ActivationConfig | None = None):
+    def __init__(self, cfg: ActivationConfig | None = None, act_params=None):
         self.cfg = cfg or ActivationConfig()
         # the registered approximant scheme this engine runs (None for
         # exact / cr_fixed / region / taylor / base2 backends)
         self.act_impl = scheme_of(self.cfg.impl)
+        # tanh params bound from the model pytree (see ``bind``); None
+        # means the cached registry build (the frozen default)
+        self.act_params = None if act_params is None else \
+            jnp.asarray(act_params, jnp.float32)
         if fixed_scheme_of(self.cfg.impl) is not None and self.cfg.use_kernel:
             # fail loudly like the fuse_mlp contract: silently running
             # the jnp path under a "kernel" flag would report fiction
@@ -305,7 +398,9 @@ class ActivationEngine:
                 f"use_kernel=True, or use impl="
                 f"{fixed_scheme_of(self.cfg.impl)!r} for the f32 kernel "
                 f"path")
-        if self.cfg.impl == "cr_fixed":
+        if self.act_params is not None:
+            self._tanh = self._bound_tanh()
+        elif self.cfg.impl == "cr_fixed":
             self._tanh = _make_tanh_cr_fixed(self.cfg)
         elif fixed_scheme_of(self.cfg.impl) is not None:
             self._tanh = _make_tanh_scheme_fixed(self.cfg)
@@ -321,6 +416,36 @@ class ActivationEngine:
                     f"(each also available as '<scheme>_fixed')")
             self._tanh = partial(backend, cfg=self.cfg)
 
+    def _bound_tanh(self):
+        """tanh backend reading ``self.act_params`` (a traced array from
+        the model pytree) instead of the cached registry build."""
+        cfg, p = self.cfg, self.act_params
+        if fixed_scheme_of(cfg.impl) is not None:
+            return _make_tanh_fixed_bound(cfg, p)
+        if cfg.use_kernel:
+            return lambda x: _kernel_act("tanh", x, cfg, params=p)
+        if self.act_impl == "cr_spline":
+            # same float-spline codepath as the unbound engine, with the
+            # windows swapped for the trainable leaf (SplineTable is a
+            # NamedTuple; interpolate casts windows to x.dtype itself)
+            tab = tanh_table(cfg.x_max, cfg.depth)._replace(windows=p)
+            return lambda x: cr.interpolate(tab, x)
+        spec = _approx_spec(cfg, "tanh")
+        return lambda x: approximant.block(
+            jnp.asarray(x).astype(jnp.float32), p,
+            spec).astype(jnp.asarray(x).dtype)
+
+    def bind(self, act_params) -> "ActivationEngine":
+        """Engine whose tanh params come from the model pytree — the
+        ``params["act"]`` subtree keyed by ``cfg.tag()`` — instead of the
+        cached registry build (the trainable path). Returns ``self``
+        when the subtree has no entry for this config (non-approximant
+        impls, or a model with no act subtree)."""
+        p = (act_params or {}).get(self.cfg.tag())
+        if p is None or tanh_spec_of(self.cfg) is None:
+            return self
+        return ActivationEngine(self.cfg, act_params=p)
+
     @property
     def _kernelized(self) -> bool:
         """True when every nonlinearity lowers to ONE epilogue kernel."""
@@ -334,21 +459,23 @@ class ActivationEngine:
         if self.cfg.impl == "exact":
             return jax.nn.sigmoid(x)
         if self._kernelized:
-            return _kernel_act("sigmoid", x, self.cfg)
+            return _kernel_act("sigmoid", x, self.cfg,
+                               params=self.act_params)
         return 0.5 * (1.0 + self.tanh(x * 0.5))
 
     def silu(self, x):
         if self.cfg.impl == "exact":
             return jax.nn.silu(x)
         if self._kernelized:
-            return _kernel_act("silu", x, self.cfg)
+            return _kernel_act("silu", x, self.cfg, params=self.act_params)
         return x * self.sigmoid(x)
 
     def gelu_tanh(self, x):
         if self.cfg.impl == "exact":
             return jax.nn.gelu(x, approximate=True)
         if self._kernelized:
-            return _kernel_act("gelu_tanh", x, self.cfg)
+            return _kernel_act("gelu_tanh", x, self.cfg,
+                               params=self.act_params)
         inner = SQRT_2_OVER_PI * (x + 0.044715 * (x * x * x))
         return 0.5 * x * (1.0 + self.tanh(inner))
 
@@ -371,6 +498,56 @@ class ActivationEngine:
 
     def __call__(self, name: str, x):
         return getattr(self, name)(x)
+
+
+class LayerEngines:
+    """Per-layer activation engines — the mixed-scheme assignment.
+
+    One ``ActivationEngine`` per DISTINCT config; ``segments`` groups
+    maximal runs of adjacent layers sharing an engine so the model's
+    stack runners scan each run as one ``lax.scan`` (each distinct spec
+    still lowers to ONE pallas_call per run, and a uniform assignment
+    collapses to a single segment == the global-engine jaxpr)."""
+
+    def __init__(self, cfgs):
+        cfgs = tuple(cfgs)
+        if not cfgs:
+            raise ValueError("LayerEngines needs at least one layer config")
+        by_cfg: dict[ActivationConfig, ActivationEngine] = {}
+        for c in cfgs:
+            if c not in by_cfg:
+                by_cfg[c] = ActivationEngine(c)
+        self.cfgs = cfgs
+        self.engines = tuple(by_cfg[c] for c in cfgs)
+        segs, start = [], 0
+        for i in range(1, len(cfgs) + 1):
+            if i == len(cfgs) or self.engines[i] is not self.engines[start]:
+                segs.append((start, i, self.engines[start]))
+                start = i
+        self.segments = tuple(segs)
+
+    @property
+    def distinct(self) -> tuple[ActivationEngine, ...]:
+        out: list[ActivationEngine] = []
+        for e in self.engines:
+            if all(e is not o for o in out):
+                out.append(e)
+        return tuple(out)
+
+    def bind(self, act_params) -> "LayerEngines":
+        """Per-layer analogue of ``ActivationEngine.bind``: every
+        distinct engine binds its own ``params["act"]`` leaf."""
+        if not act_params:
+            return self
+        bound = {id(e): e.bind(act_params) for e in self.distinct}
+        if all(bound[id(e)] is e for e in self.distinct):
+            return self
+        new = object.__new__(LayerEngines)
+        new.cfgs = self.cfgs
+        new.engines = tuple(bound[id(e)] for e in self.engines)
+        new.segments = tuple((s, t, bound[id(e)])
+                             for s, t, e in self.segments)
+        return new
 
 
 def get_engine(cfg: ActivationConfig | dict | None = None) -> ActivationEngine:

@@ -230,6 +230,18 @@ class Approximant:
         int32 lattice out — the Fig.-3-style circuit of this scheme."""
         raise NotImplementedError
 
+    def requantize(self, params, spec: ApproxSpec):
+        """Traceable analogue of ``build_fixed`` on a (possibly trained)
+        f32 parameter array: f32 params -> the int32 ROM ``fixed_block``
+        reads. Default mirrors the default ``build_fixed`` (guard-format
+        quantization of the float coefficients); LUT-value schemes
+        override to match their own ROM construction. At the built
+        (untrained) params this reproduces ``build_fixed`` exactly —
+        asserted per scheme in tests — which is what makes the
+        quantization-aware ``*_fixed`` training path consistent with the
+        frozen integer datapath."""
+        return quantize(jnp.asarray(params, jnp.float32), spec.guard_format)
+
 
 def spec_for(scheme: str, act: str = "tanh", *, x_max: float = 4.0,
              depth: int = 32, degree: int = 3, int_bits: int = 2,
@@ -284,6 +296,14 @@ def fixed_block(vq, params_q, spec: ApproxSpec):
     entry point error analysis and the ``<scheme>_fixed`` engine
     backends share."""
     return get(spec.scheme).fixed_block(vq, params_q, spec)
+
+
+def requantize(params, spec: ApproxSpec):
+    """Generic traceable f32-params -> int32-ROM dispatch (the trainable
+    analogue of ``fixed_params_for``): what the bound ``<scheme>_fixed``
+    engine backends feed ``fixed_block`` during quantization-aware
+    training."""
+    return get(spec.scheme).requantize(params, spec)
 
 
 # ---------------------------------------------------------------------------
@@ -418,6 +438,11 @@ class CRSpline(Approximant):
                              spec.t_bits, params_q, _sat_q(spec))
         return cr.interpolate_fixed(ftab, vq)
 
+    def requantize(self, params, spec):
+        # window values quantized straight to the OUTPUT lattice —
+        # exactly what build_fixed_table does to the f64 knot windows
+        return quantize(jnp.asarray(params, jnp.float32), spec.qformat)
+
 
 # ---------------------------------------------------------------------------
 # scheme: pwl (PLAN-style segment LUT + slope MAC)
@@ -474,6 +499,16 @@ class PWL(Approximant):
                             a_bits=tb + 1, b_bits=tb)
         y = sat(y0 + step, spec.qformat)
         return _fixed_finish(y, sign_neg, in_range, spec)
+
+    def requantize(self, params, spec):
+        # reconstruct the knot values from (value, delta), quantize the
+        # knots to the OUTPUT lattice, re-form the deltas ON the lattice
+        # — the same order of operations as build_fixed, so segment ends
+        # land exactly on the quantized knots after training too
+        p = jnp.asarray(params, jnp.float32)
+        knots = jnp.concatenate([p[:, 0], p[-1:, 0] + p[-1:, 1]])
+        yq = quantize(knots, spec.qformat)
+        return jnp.stack([yq[:-1], yq[1:] - yq[:-1]], axis=1)
 
 
 # ---------------------------------------------------------------------------

@@ -126,7 +126,7 @@ _act_core.defvjp(_act_core_fwd, _act_core_bwd)
 
 def act(x, name: str = "tanh", table: cr.SplineTable | None = None, *,
         method: str | None = None, spec: epi.ApproxSpec | None = None,
-        depth: int = 32, degree: int = 3, x_max: float = 4.0,
+        params=None, depth: int = 32, degree: int = 3, x_max: float = 4.0,
         lookup: str = "onehot", interpret: bool | None = None,
         block_rows: int = epi.DEFAULT_BLOCK_ROWS,
         block_cols: int = epi.DEFAULT_BLOCK_COLS):
@@ -137,13 +137,18 @@ def act(x, name: str = "tanh", table: cr.SplineTable | None = None, *,
     registry kernels), or ``method`` (a registered scheme name, with
     ``depth``/``degree``/``x_max`` as its geometry). The default is the
     paper's flagship CR table (x_max=4, depth=32; softplus widens per
-    ``epilogue.table_for``)."""
-    spec, params = _resolve_spec_params(name, table, method, spec, depth,
-                                        degree, x_max)
+    ``epilogue.table_for``). ``params`` overrides the registry-built
+    parameter array with a traced one (the trainable model leaf) —
+    same shape, same spec, and it rides into the kernel as the normal
+    VMEM operand, so gradients flow through the custom-VJP recompute."""
+    spec, p = _resolve_spec_params(name, table, method, spec, depth,
+                                   degree, x_max)
+    if params is not None:
+        p = jnp.asarray(params, jnp.float32)
     if interpret is None:
         interpret = _interpret_default()
     static = (spec, name, lookup, interpret, block_rows, block_cols)
-    return _act_core(static, x, params)
+    return _act_core(static, x, p)
 
 
 def cr_act(x, table: cr.SplineTable | None = None, *, lookup: str = "onehot",
@@ -222,15 +227,19 @@ _fused_glu_core.defvjp(_fused_glu_core_fwd, _fused_glu_core_bwd)
 
 def fused_glu(x, w_gate, w_up, table: cr.SplineTable | None = None, *,
               act: str = "silu", method: str | None = None,
-              spec: epi.ApproxSpec | None = None,
+              spec: epi.ApproxSpec | None = None, params=None,
               depth: int = 32, degree: int = 3, x_max: float = 4.0,
               lookup: str = "onehot", interpret: bool | None = None,
               block_m: int = 128, block_n: int = 128, block_k: int = 512):
     """epilogue(x @ w_gate) * (x @ w_up) in one fused Pallas kernel,
-    under any registered approximant scheme (selection as in ``act``)."""
-    spec, params = _resolve_spec_params(act, table, method, spec, depth,
-                                        degree, x_max)
+    under any registered approximant scheme (selection as in ``act``;
+    ``params`` overrides the built parameter array with the trainable
+    model leaf, as in ``act``)."""
+    spec, p = _resolve_spec_params(act, table, method, spec, depth,
+                                   degree, x_max)
+    if params is not None:
+        p = jnp.asarray(params, jnp.float32)
     if interpret is None:
         interpret = _interpret_default()
     static = (spec, act, lookup, interpret, block_m, block_n, block_k)
-    return _fused_glu_core(static, x, w_gate, w_up, params)
+    return _fused_glu_core(static, x, w_gate, w_up, p)

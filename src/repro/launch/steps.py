@@ -15,7 +15,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.activations import ActivationEngine
+from repro.core.activations import ActivationEngine, LayerEngines
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.optim import adamw, compress
@@ -36,6 +36,13 @@ class TrainHyper:
                                   # activation residency shrinks ~n-fold —
                                   # the HBM-fit knob for big train cells
                                   # (EXPERIMENTS.md §Dry-run)
+    train_act: bool = False       # unfreeze the approximant params (the
+                                  # params["act"] knot/coefficient leaves;
+                                  # launch/train.py --train-act). Frozen by
+                                  # default: grads zeroed before the clip,
+                                  # params/moments restored after the
+                                  # update, so the datapath stays exactly
+                                  # the registry build
 
 
 def opt_state_axes(params_axes):
@@ -46,33 +53,40 @@ def opt_state_axes(params_axes):
     }
 
 
-def _make_engine(cfg: ModelConfig) -> ActivationEngine:
+def _make_engine(cfg: ModelConfig) -> ActivationEngine | LayerEngines:
     """Engine for a step function, with the config contracts enforced at
     build time.
 
-    ``cfg.act_impl`` (the approximant-scheme override) is resolved here:
-    a bogus scheme fails the whole step build with the registered-scheme
-    list instead of surfacing as a trace-time KeyError mid-run. The
-    fuse_mlp contract likewise: a config that asks for fusion but can't
-    get it (no GLU, non-epilogue act, non-approximant engine) would
-    otherwise silently fall back to the unfused path and report fiction
-    in the dry-run roofline."""
-    acfg = cfg.activation
-    if cfg.act_impl:
-        acfg = dataclasses.replace(acfg, impl=cfg.act_impl)
+    ``cfg.act_impl`` (the approximant-scheme override) and the per-layer
+    ``cfg.act_layers`` assignment are resolved here: a bogus scheme or a
+    malformed assignment fails the whole step build with the registered-
+    scheme list instead of surfacing as a trace-time KeyError mid-run.
+    The fuse_mlp contract likewise: a config that asks for fusion but
+    can't get it (no GLU, non-epilogue act, non-approximant engine on
+    any layer) would otherwise silently fall back to the unfused path
+    and report fiction in the dry-run roofline."""
     try:
-        engine = ActivationEngine(acfg)
+        layer_cfgs = cfg.layer_activation_configs()
+        if len(set(layer_cfgs)) == 1:
+            # uniform assignment -> ONE engine, one lax.scan over the
+            # whole stack: the exact pre-assignment jaxpr
+            engine = ActivationEngine(layer_cfgs[0])
+        else:
+            engine = LayerEngines(layer_cfgs)
     except ValueError as e:
         raise ValueError(f"{cfg.name}: invalid activation config "
-                         f"(act_impl={cfg.act_impl!r}): {e}") from e
+                         f"(act_impl={cfg.act_impl!r}, "
+                         f"act_layers={cfg.act_layers!r}): {e}") from e
     if cfg.fuse_mlp:
         from repro.models.layers import mlp_fusable
-        if not mlp_fusable(cfg, engine):
-            raise ValueError(
-                f"{cfg.name}: fuse_mlp=True requires glu=True, mlp_act in "
-                f"kernels.epilogue.EPILOGUES and an approximant-scheme "
-                f"activation engine (got glu={cfg.glu}, "
-                f"mlp_act={cfg.mlp_act!r}, impl={acfg.impl!r})")
+        for eng in getattr(engine, "distinct", (engine,)):
+            if not mlp_fusable(cfg, eng):
+                raise ValueError(
+                    f"{cfg.name}: fuse_mlp=True requires glu=True, mlp_act "
+                    f"in kernels.epilogue.EPILOGUES and an approximant-"
+                    f"scheme activation engine on EVERY layer (got "
+                    f"glu={cfg.glu}, mlp_act={cfg.mlp_act!r}, "
+                    f"impl={eng.cfg.impl!r})")
     return engine
 
 
@@ -113,6 +127,12 @@ def make_train_step(cfg: ModelConfig, hyper: TrainHyper = TrainHyper()):
             (loss, metrics), grads = accumulate(params, batch)
         else:
             (loss, metrics), grads = grads_of(params, batch)
+        if not hyper.train_act and "act" in grads:
+            # frozen approximant params: zero their grads BEFORE the
+            # global-norm clip (gnorm then matches a model without the
+            # act subtree)
+            grads = dict(grads,
+                         act=jax.tree.map(jnp.zeros_like, grads["act"]))
         grads, gnorm = adamw.clip_by_global_norm(grads, hyper.opt.clip_norm)
         if hyper.grad_compression:
             grads, new_err = compress.compress_grads(grads, opt_state["error"])
@@ -121,6 +141,12 @@ def make_train_step(cfg: ModelConfig, hyper: TrainHyper = TrainHyper()):
         new_params, new_inner = adamw.adamw_update(grads, inner, params,
                                                    hyper.opt, lr)
         new_state = dict(new_inner)
+        if not hyper.train_act and "act" in new_params:
+            # AdamW weight decay would shrink the frozen leaves even at
+            # zero grad — restore params and moments verbatim
+            new_params = dict(new_params, act=params["act"])
+            new_state["m"] = dict(new_state["m"], act=opt_state["m"]["act"])
+            new_state["v"] = dict(new_state["v"], act=opt_state["v"]["act"])
         if hyper.grad_compression:
             new_state["error"] = new_err
         if hyper.skip_nonfinite:

@@ -53,6 +53,15 @@ def build_parser():
     p.add_argument("--act-impl-kernel", action="store_true",
                    help="with --act-impl: use_kernel=True (one pallas_call "
                         "per nonlinearity)")
+    p.add_argument("--act-layers", default=None,
+                   help="comma-separated per-layer approximant assignment "
+                        "(one tag or impl per layer, e.g. "
+                        "'pwl-d16,cr-d32'); mutually exclusive with "
+                        "--act-impl")
+    p.add_argument("--train-act", action="store_true",
+                   help="unfreeze the approximant params (knots / "
+                        "coefficients) — quantization-aware fine-tuning "
+                        "when combined with a *_fixed impl")
     p.add_argument("--remat", default="none", choices=["none", "block", "dots"])
     p.add_argument("--grad-compression", action="store_true")
     p.add_argument("--data-parallel", type=int, default=0,
@@ -80,6 +89,9 @@ def main(argv=None):
         from repro.configs.common import act_impl_of
         cfg = act_impl_of(cfg, args.act_impl,
                           use_kernel=True if args.act_impl_kernel else None)
+    if args.act_layers:
+        from repro.configs.common import act_layers_of
+        cfg = act_layers_of(cfg, args.act_layers.split(","))
     n_dev = len(jax.devices())
     dp = args.data_parallel or max(1, n_dev // args.model_parallel)
     mesh = make_host_mesh(dp, args.model_parallel)
@@ -89,7 +101,8 @@ def main(argv=None):
     hyper = steps_mod.TrainHyper(
         opt=adamw.AdamWConfig(lr_peak=args.lr, warmup_steps=args.warmup,
                               decay_steps=max(args.steps, 2 * args.warmup)),
-        remat=args.remat, grad_compression=args.grad_compression)
+        remat=args.remat, grad_compression=args.grad_compression,
+        train_act=args.train_act)
 
     with part.axis_rules(mesh):
         params, paxes = M.materialize_params(cfg, seed=args.seed)

@@ -84,6 +84,12 @@ class ModelConfig:
                                     # activation.impl replaced by it —
                                     # validated in launch/steps.py so train
                                     # AND serve run the scheme end-to-end
+    act_layers: tuple = ()          # per-layer approximant assignment (the
+                                    # autotuner's output): one entry per
+                                    # layer, each an ActivationConfig, an
+                                    # ActivationConfig.tag() string, or a
+                                    # bare impl name. Mutually exclusive
+                                    # with act_impl (the uniform shorthand)
 
     # precision
     param_dtype: str = "float32"
@@ -121,6 +127,41 @@ class ModelConfig:
     @property
     def has_ffn(self) -> bool:
         return self.d_ff > 0
+
+    def layer_activation_configs(self) -> tuple[ActivationConfig, ...]:
+        """The resolved per-layer ActivationConfig assignment (length
+        ``n_layers``). ``act_layers`` entries may be ActivationConfig
+        instances, ``tag()`` strings (impl-d{depth}[-g{deg}][-q{i}.{f}]),
+        or bare impl names (which keep this model's depth/x_max/etc.).
+        Without ``act_layers`` this is the uniform assignment the stack
+        always ran: ``activation`` with the ``act_impl`` override."""
+        base = self.activation
+        if not self.act_layers:
+            if self.act_impl:
+                base = dataclasses.replace(base, impl=self.act_impl)
+            return (base,) * self.n_layers
+        if self.act_impl:
+            raise ValueError(
+                f"{self.name}: act_layers and act_impl are mutually "
+                f"exclusive — act_impl is the uniform shorthand")
+        if len(self.act_layers) != self.n_layers:
+            raise ValueError(
+                f"{self.name}: act_layers has {len(self.act_layers)} "
+                f"entries for n_layers={self.n_layers}")
+        out = []
+        for e in self.act_layers:
+            if isinstance(e, ActivationConfig):
+                out.append(e)
+            elif isinstance(e, str) and "-" in e:
+                out.append(ActivationConfig.from_tag(
+                    e, x_max=base.x_max, use_kernel=base.use_kernel))
+            elif isinstance(e, str):
+                out.append(dataclasses.replace(base, impl=e))
+            else:
+                raise ValueError(
+                    f"{self.name}: bad act_layers entry {e!r} (want "
+                    f"ActivationConfig, tag string, or impl name)")
+        return tuple(out)
 
     def param_count(self) -> int:
         """Approximate parameter count (used for MODEL_FLOPS = 6*N*D)."""

@@ -327,17 +327,20 @@ def apply_mlp(params, x, cfg: ModelConfig, engine: ActivationEngine):
         # accumulator — the gate projection never round-trips to HBM.
         from repro.kernels import epilogue as epi, ops as kernel_ops
         ecfg = engine.cfg
+        # a bound engine's trainable tanh params ride into the kernel;
+        # the softplus epilogue reads its own residual table instead
+        bound = None if cfg.mlp_act == "softplus" else engine.act_params
         if engine.act_impl == "cr_spline":
             table = epi.table_for(cfg.mlp_act, ecfg.x_max, ecfg.depth)
             h = kernel_ops.fused_glu(x, params["w_gate"].astype(cdt),
                                      params["w_up"].astype(cdt), table,
-                                     act=cfg.mlp_act)
+                                     act=cfg.mlp_act, params=bound)
         else:
             h = kernel_ops.fused_glu(x, params["w_gate"].astype(cdt),
                                      params["w_up"].astype(cdt),
                                      act=cfg.mlp_act, method=engine.act_impl,
                                      depth=ecfg.depth, x_max=ecfg.x_max,
-                                     degree=ecfg.degree)
+                                     degree=ecfg.degree, params=bound)
     else:
         up = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(cdt))
         if cfg.glu:

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.activations import ActivationEngine
+from repro.core.activations import ActivationEngine, init_act_params
 from repro.parallel.partition import Boxed, box, is_boxed, unbox_tree
 from repro.parallel.partition import logical_constraint as lc
 
@@ -45,6 +45,13 @@ def init_lm(key, cfg: ModelConfig):
         lambda *ls: Boxed(jnp.stack([b.value for b in ls]),
                           ("layer",) + ls[0].axes),
         *layers, is_leaf=is_boxed)
+    # approximant params (knots / coefficients) as model leaves: one
+    # entry per distinct trainable activation config in the per-layer
+    # assignment, replicated (tiny arrays). Frozen unless --train-act.
+    act = init_act_params(cfg.layer_activation_configs())
+    if act:
+        params["act"] = {tag: box((None,) * arr.ndim, jnp.asarray(arr))
+                         for tag, arr in act.items()}
     return params
 
 
@@ -98,6 +105,37 @@ def lm_logits(params, h, cfg: ModelConfig):
 # stack runners
 # ---------------------------------------------------------------------------
 
+def _bind_engine(engine, params):
+    """Engine(s) with tanh params bound from the model pytree (the
+    optional ``params["act"]`` subtree) — resolved once per step
+    function at trace time, so the approximant parameters are ordinary
+    differentiable leaves wherever the model runs."""
+    act = params.get("act") if hasattr(params, "get") else None
+    return engine.bind(act) if act else engine
+
+
+def _scan_layers(engine, body_for, init, xs):
+    """Scan the layer stack under a (possibly per-layer) engine.
+
+    ``body_for(eng)`` returns a ``lax.scan`` body closing over ONE
+    ActivationEngine. A plain engine scans all layers in a single
+    ``lax.scan`` — the exact pre-assignment jaxpr — while a
+    ``LayerEngines`` assignment scans each maximal same-engine segment
+    separately (stacked params sliced along the layer axis) and
+    concatenates the per-layer outputs back together."""
+    segs = getattr(engine, "segments", None)
+    if segs is None:
+        return jax.lax.scan(body_for(engine), init, xs)
+    carry, outs = init, []
+    for s, t, eng in segs:
+        carry, ys = jax.lax.scan(body_for(eng), carry,
+                                 jax.tree.map(lambda a: a[s:t], xs))
+        outs.append(ys)
+    if len(outs) == 1:
+        return carry, outs[0]
+    return carry, jax.tree.map(lambda *p: jnp.concatenate(p, axis=0), *outs)
+
+
 def _positions_for(batch, cfg: ModelConfig, S: int, offset=0):
     if cfg.rope_kind == "mrope" and "mrope_positions" in batch:
         return batch["mrope_positions"]
@@ -116,23 +154,27 @@ def run_stack_train(params, x, batch, cfg: ModelConfig, engine: ActivationEngine
         k_pos=jnp.arange(S, dtype=jnp.int32),
     )
 
-    def block_fn(x, layer_params):
-        io = BlockIO(mode="train", **io_template)
-        return apply_block(layer_params, x, io, cfg, engine)
+    def body_for(eng):
+        def block_fn(x, layer_params):
+            io = BlockIO(mode="train", **io_template)
+            return apply_block(layer_params, x, io, cfg, eng)
 
-    if remat == "block":
-        block_fn = jax.checkpoint(block_fn, prevent_cse=False)
-    elif remat == "dots":
-        block_fn = jax.checkpoint(
-            block_fn, prevent_cse=False,
-            policy=jax.checkpoint_policies.checkpoint_dots)
+        if remat == "block":
+            block_fn = jax.checkpoint(block_fn, prevent_cse=False)
+        elif remat == "dots":
+            block_fn = jax.checkpoint(
+                block_fn, prevent_cse=False,
+                policy=jax.checkpoint_policies.checkpoint_dots)
 
-    def scan_body(carry, layer_params):
-        x, aux = carry
-        x, _, aux_i = block_fn(x, layer_params)
-        return (x, aux + aux_i), None
+        def scan_body(carry, layer_params):
+            x, aux = carry
+            x, _, aux_i = block_fn(x, layer_params)
+            return (x, aux + aux_i), None
 
-    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.float32(0.0)), params["blocks"])
+        return scan_body
+
+    (x, aux), _ = _scan_layers(engine, body_for, (x, jnp.float32(0.0)),
+                               params["blocks"])
     return x, aux / cfg.n_layers
 
 
@@ -154,20 +196,25 @@ def run_stack_prefill(params, x, batch, cfg: ModelConfig, engine, capacity: int,
         k_pos=jnp.arange(S, dtype=jnp.int32),
     )
 
-    def scan_body(x, layer_params):
-        io = BlockIO(mode="prefill", **io_template)
-        x, cache, _ = apply_block(layer_params, x, io, cfg, engine)
-        out_cache = {}
-        for name, val in cache.items():
-            if name in ("k", "v"):
-                out_cache[name] = (
-                    _prefill_kv_to_cache(val, capacity, S) if lengths is None
-                    else _prefill_kv_to_cache_ragged(val, capacity, lengths))
-            else:
-                out_cache[name] = val
-        return x, out_cache
+    def body_for(eng):
+        def scan_body(x, layer_params):
+            io = BlockIO(mode="prefill", **io_template)
+            x, cache, _ = apply_block(layer_params, x, io, cfg, eng)
+            out_cache = {}
+            for name, val in cache.items():
+                if name in ("k", "v"):
+                    out_cache[name] = (
+                        _prefill_kv_to_cache(val, capacity, S)
+                        if lengths is None
+                        else _prefill_kv_to_cache_ragged(val, capacity,
+                                                         lengths))
+                else:
+                    out_cache[name] = val
+            return x, out_cache
 
-    x, caches = jax.lax.scan(scan_body, x, params["blocks"])
+        return scan_body
+
+    x, caches = _scan_layers(engine, body_for, x, params["blocks"])
     if lengths is None:
         cache = {"layers": caches, "cur": jnp.int32(S)}
         if cfg.has_attention or cfg.parallel_mamba:
@@ -253,20 +300,24 @@ def run_stack_prefill_prefix(params, x, batch, cfg: ModelConfig, engine,
     )
     pad = (-S) % page_size
 
-    def scan_body(x, inp):
-        layer_params, pre = inp
-        io = BlockIO(mode="prefill",
-                     cache={"k_pre": pre["k"], "v_pre": pre["v"]},
-                     **io_template)
-        x, cache, _ = apply_block(layer_params, x, io, cfg, engine)
-        out = {}
-        for name in ("k", "v"):
-            kv = cache[name]
-            out[name] = jnp.pad(kv, ((0, 0), (0, pad), (0, 0), (0, 0))) \
-                if pad else kv
-        return x, out
+    def body_for(eng):
+        def scan_body(x, inp):
+            layer_params, pre = inp
+            io = BlockIO(mode="prefill",
+                         cache={"k_pre": pre["k"], "v_pre": pre["v"]},
+                         **io_template)
+            x, cache, _ = apply_block(layer_params, x, io, cfg, eng)
+            out = {}
+            for name in ("k", "v"):
+                kv = cache[name]
+                out[name] = jnp.pad(kv, ((0, 0), (0, pad), (0, 0), (0, 0))) \
+                    if pad else kv
+            return x, out
 
-    x, caches = jax.lax.scan(scan_body, x, (params["blocks"], prefix_kv))
+        return scan_body
+
+    x, caches = _scan_layers(engine, body_for, x,
+                             (params["blocks"], prefix_kv))
     total = prefix_len + lengths.astype(jnp.int32)          # [B]
     j = jnp.arange(capacity, dtype=jnp.int32)[None, :]
     k_pos = jnp.where(j < total[:, None], j, -1)
@@ -317,21 +368,24 @@ def run_stack_prefill_chunk(params, x, batch, cfg: ModelConfig, engine,
     w_page = jnp.where(i < clen, tbl_row[ring_slot // ps], 0)  # pads -> trash
     w_off = ring_slot % ps
 
-    def scan_body(x, inp):
-        layer_params, pool_k, pool_v = inp
-        ring = lambda pool: pool[tbl_row].reshape((W,) + pool.shape[2:])
-        io = BlockIO(mode="prefill",
-                     cache={"k_pre": ring(pool_k), "v_pre": ring(pool_v)},
-                     **io_template)
-        x, cache, _ = apply_block(layer_params, x, io, cfg, engine)
-        new_k = pool_k.at[w_page, w_off].set(
-            cache["k"][0].astype(pool_k.dtype))
-        new_v = pool_v.at[w_page, w_off].set(
-            cache["v"][0].astype(pool_v.dtype))
-        return x, (new_k, new_v)
+    def body_for(eng):
+        def scan_body(x, inp):
+            layer_params, pool_k, pool_v = inp
+            ring = lambda pool: pool[tbl_row].reshape((W,) + pool.shape[2:])
+            io = BlockIO(mode="prefill",
+                         cache={"k_pre": ring(pool_k), "v_pre": ring(pool_v)},
+                         **io_template)
+            x, cache, _ = apply_block(layer_params, x, io, cfg, eng)
+            new_k = pool_k.at[w_page, w_off].set(
+                cache["k"][0].astype(pool_k.dtype))
+            new_v = pool_v.at[w_page, w_off].set(
+                cache["v"][0].astype(pool_v.dtype))
+            return x, (new_k, new_v)
 
-    x, (ks, vs) = jax.lax.scan(
-        scan_body, x, (params["blocks"], pool_kv["k"], pool_kv["v"]))
+        return scan_body
+
+    x, (ks, vs) = _scan_layers(
+        engine, body_for, x, (params["blocks"], pool_kv["k"], pool_kv["v"]))
     idx = jnp.where(i < clen, ring_slot, W)         # pads: OOB -> dropped
     new_row = k_pos_row.at[idx].set(own_pos, mode="drop")
     return x, {"k": ks, "v": vs}, new_row
@@ -397,22 +451,26 @@ def run_stack_decode(params, x, batch, cfg: ModelConfig, engine, cache):
     else:
         k_pos_new = None
 
-    def scan_body(x, inp):
-        layer_params, layer_cache = inp
-        lcache = dict(layer_cache)
-        if tbl is not None:
-            lcache["page"], lcache["off"], lcache["page_tbl"] = page, off, tbl
-        else:
-            lcache["slot"] = slot
-        io = BlockIO(mode="decode", positions=positions, q_pos=cur_b,
-                     k_pos=k_pos_new, cache=lcache)
-        x, new_cache, _ = apply_block(layer_params, x, io, cfg, engine)
-        # preserve untouched entries (e.g. nothing for pure attn)
-        merged = {k: new_cache.get(k, v) for k, v in layer_cache.items()}
-        return x, merged
+    def body_for(eng):
+        def scan_body(x, inp):
+            layer_params, layer_cache = inp
+            lcache = dict(layer_cache)
+            if tbl is not None:
+                lcache["page"], lcache["off"], lcache["page_tbl"] = \
+                    page, off, tbl
+            else:
+                lcache["slot"] = slot
+            io = BlockIO(mode="decode", positions=positions, q_pos=cur_b,
+                         k_pos=k_pos_new, cache=lcache)
+            x, new_cache, _ = apply_block(layer_params, x, io, cfg, eng)
+            # preserve untouched entries (e.g. nothing for pure attn)
+            merged = {k: new_cache.get(k, v) for k, v in layer_cache.items()}
+            return x, merged
 
-    x, new_layer_caches = jax.lax.scan(
-        scan_body, x, (params["blocks"], cache["layers"]))
+        return scan_body
+
+    x, new_layer_caches = _scan_layers(
+        engine, body_for, x, (params["blocks"], cache["layers"]))
     adv = 1 if wm is None else wm.astype(jnp.int32)
     new_cache = {"layers": new_layer_caches, "cur": cur + adv}
     if k_pos_new is not None:
@@ -559,6 +617,7 @@ def init_paged_cache(cfg: ModelConfig, slots: int, n_pages: int,
 def loss_fn(params, batch, cfg: ModelConfig, engine: ActivationEngine,
             remat: str = "block", z_loss: float = 1e-4):
     tokens, labels = batch["tokens"], batch["labels"]
+    engine = _bind_engine(engine, params)
     x = embed_tokens(params, tokens, cfg, batch.get("patch_embeds"))
     x, aux = run_stack_train(params, x, batch, cfg, engine, remat)
     x = apply_norm(params["ln_f"], x, cfg)
@@ -574,6 +633,7 @@ def loss_fn(params, batch, cfg: ModelConfig, engine: ActivationEngine,
 def forward_fn(params, batch, cfg: ModelConfig, engine: ActivationEngine):
     """Full-sequence logits, no cache (tests / evaluation)."""
     tokens = batch["tokens"]
+    engine = _bind_engine(engine, params)
     x = embed_tokens(params, tokens, cfg, batch.get("patch_embeds"))
     x, _ = run_stack_train(params, x, batch, cfg, engine, remat="none")
     x = apply_norm(params["ln_f"], x, cfg)
@@ -590,6 +650,7 @@ def prefill_fn(params, batch, cfg: ModelConfig, engine: ActivationEngine,
     capacity = capacity or cache_capacity(cfg, S)
     if lengths is None:
         lengths = batch.get("lengths")
+    engine = _bind_engine(engine, params)
     x = embed_tokens(params, tokens, cfg, batch.get("patch_embeds"))
     x, cache = run_stack_prefill(params, x, batch, cfg, engine, capacity,
                                  lengths=lengths)
@@ -613,6 +674,7 @@ def prefill_prefix_fn(params, batch, cfg: ModelConfig,
     in the pool and are never rewritten."""
     tokens = batch["tokens"]
     lengths = batch["lengths"]
+    engine = _bind_engine(engine, params)
     x = embed_tokens(params, tokens, cfg, batch.get("patch_embeds"))
     x, cache = run_stack_prefill_prefix(params, x, batch, cfg, engine,
                                         prefix_kv, prefix_len, capacity,
@@ -632,6 +694,7 @@ def prefill_chunk_fn(params, batch, cfg: ModelConfig,
     chunk's last real token — only meaningful on the final chunk, where
     the engine samples the first generated token from them."""
     tokens = batch["tokens"]                               # [1, S]
+    engine = _bind_engine(engine, params)
     x = embed_tokens(params, tokens, cfg, batch.get("patch_embeds"))
     x, new_kv, new_row = run_stack_prefill_chunk(
         params, x, batch, cfg, engine, pool_kv, tbl_row, k_pos_row,
@@ -645,6 +708,7 @@ def prefill_chunk_fn(params, batch, cfg: ModelConfig,
 
 def decode_fn(params, batch, cache, cfg: ModelConfig, engine: ActivationEngine):
     tokens = batch["tokens"]                               # [B, 1(,K)]
+    engine = _bind_engine(engine, params)
     x = embed_tokens(params, tokens, cfg, batch.get("patch_embeds"))
     x, cache = run_stack_decode(params, x, batch, cfg, engine, cache)
     x = apply_norm(params["ln_f"], x, cfg)

@@ -9,7 +9,8 @@ planner that interleaves chunked prefill with decode
 (`EngineConfig(chunk_prefill=N)`); `PagePool` (paging.py) owns page
 allocation, worst-case reservations, and refcounted prefix chains.
 """
-from .engine import EngineConfig, EngineStats, ServeEngine, sample_tokens
+from .engine import (EngineConfig, EngineStats, ServeEngine,
+                     sample_tokens, sample_tokens_indexed)
 from .scheduler import (Completion, FifoScheduler, Request, StepPlan,
                         TokenBudgetScheduler, bucket_len)
 
@@ -24,4 +25,5 @@ __all__ = [
     "TokenBudgetScheduler",
     "bucket_len",
     "sample_tokens",
+    "sample_tokens_indexed",
 ]

@@ -51,9 +51,15 @@ hit, and the final chunk samples the first token and arms decode state
 on device. The decode chunk is dispatched before the chunks and synced
 after them, so chunk compute overlaps the decode wait — long prompts
 cost decoding slots at most one bounded chunk of interference per
-iteration instead of a whole prompt. Greedy decode is token-identical
-to the unchunked engine; temperature>0 draws per-chunk host keys and
-diverges (documented, like drain trimming).
+iteration instead of a whole prompt.
+
+Sampling is schedule-invariant: every drawn token's key is derived as
+`fold_in(fold_in(base_key, uid), token_index)` (sample_tokens_indexed),
+a pure function of the request and the token position — never of how
+many dispatches the host happened to cut the work into. One-shot,
+chunked-prefill and drain-trimmed schedules are therefore
+token-identical at ANY temperature, not just greedy
+(tests/test_serve.py::test_chunked_schedule_token_identical_temp).
 
 With a mesh, every jitted step (prefill, insert, decode) carries
 explicit NamedShardings: parameters and the per-slot cache are resolved
@@ -95,16 +101,37 @@ def sample_tokens(key, logits, temperature):
     return jnp.where(t > 0.0, sampled, greedy)
 
 
+def sample_tokens_indexed(base_key, uid, index, logits, temperature):
+    """Schedule-invariant per-row sampling: row i draws with the key
+    `fold_in(fold_in(base_key, uid[i]), index[i])` — a pure function of
+    the request identity and the token position, independent of how the
+    host batched dispatches. temperature <= 0 -> greedy. logits
+    [B, ..., V], uid/index int32 [B], temperature [B] f32. Returns
+    int32 [B, ...]."""
+    keys = jax.vmap(
+        lambda u, i: jax.random.fold_in(jax.random.fold_in(base_key, u), i)
+    )(uid, index)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = temperature.reshape(temperature.shape + (1,) * (greedy.ndim - 1))
+    scaled = logits / jnp.maximum(t, 1e-6)[..., None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(t > 0.0, sampled, greedy)
+
+
 def make_prefill_sample(cfg: ModelConfig, capacity: int):
     """Jit-able admission step: ragged prefill + on-device first-token
     sampling in one dispatch. (params, batch{tokens [N,S], lengths [N]},
-    key, temperature [N]) -> (tok0 [N], per-slot cache). Full-vocab
-    logits never leave the device — the host syncs only tok0."""
+    uids [N], key, temperature [N]) -> (tok0 [N], per-slot cache). The
+    first token is token index 0 of its request, so it samples with the
+    schedule-invariant (uid, 0) key. Full-vocab logits never leave the
+    device — the host syncs only tok0."""
     prefill = steps_mod.make_prefill_step(cfg, capacity=capacity)
 
-    def prefill_sample(params, batch, key, temperature):
+    def prefill_sample(params, batch, uids, key, temperature):
         logits, cache = prefill(params, batch)
-        return sample_tokens(key, logits, temperature), cache
+        idx0 = jnp.zeros_like(uids)
+        return sample_tokens_indexed(key, uids, idx0, logits,
+                                     temperature), cache
 
     return prefill_sample
 
@@ -184,7 +211,7 @@ def make_prefix_prefill_sample(cfg: ModelConfig, n_pre: int, page_size: int,
     engine = steps_mod.make_engine(cfg)
     prefix_len = n_pre * page_size
 
-    def prefill_sample(params, pool_kv, pages, batch, key, temperature):
+    def prefill_sample(params, pool_kv, pages, batch, uids, key, temperature):
         prefix = {}
         for name in ("k", "v"):
             sel = pool_kv[name][:, pages]             # [L, n_pre, ps, KV, hd]
@@ -193,7 +220,9 @@ def make_prefix_prefill_sample(cfg: ModelConfig, n_pre: int, page_size: int,
         logits, cache = M.prefill_prefix_fn(params, batch, cfg, engine,
                                             prefix, prefix_len, capacity,
                                             page_size)
-        return sample_tokens(key, logits, temperature), cache
+        idx0 = jnp.zeros_like(uids)
+        return sample_tokens_indexed(key, uids, idx0, logits,
+                                     temperature), cache
 
     return prefill_sample
 
@@ -215,26 +244,27 @@ def make_decode_chunk(cfg: ModelConfig, n_steps: int, paged: bool = False):
 
     def chunk(params, cache, state):
         budget, temp, eos = state["budget"], state["temp"], state["eos"]
+        base, uid = state["key"], state["uid"]
 
         def body(carry, _):
-            cache, tok, key, emitted, active = carry
+            cache, tok, emitted, active = carry
             batch = {"tokens": tok[:, None]}
             if paged:
                 batch["write_mask"] = active
             logits, cache = M.decode_fn(params, batch, cache, cfg, engine)
-            key, sub = jax.random.split(key)
-            nxt = sample_tokens(sub, logits, temp)
+            # emitted counts tokens already drawn (tok0 = index 0), so
+            # this step's token is request-token index `emitted` — the
+            # same key no matter how steps are cut into chunks
+            nxt = sample_tokens_indexed(base, uid, emitted, logits, temp)
             nxt = jnp.where(active, nxt, 0)                # pad idle rows
             emitted = emitted + active.astype(jnp.int32)
             active = active & (nxt != eos) & (emitted < budget)
-            return (cache, nxt, key, emitted, active), nxt
+            return (cache, nxt, emitted, active), nxt
 
-        carry0 = (cache, state["tok"], state["key"],
-                  state["emitted"], state["active"])
-        (cache, tok, key, emitted, active), toks = jax.lax.scan(
+        carry0 = (cache, state["tok"], state["emitted"], state["active"])
+        (cache, tok, emitted, active), toks = jax.lax.scan(
             body, carry0, None, length=n_steps)
-        new_state = dict(state, tok=tok, key=key, emitted=emitted,
-                         active=active)
+        new_state = dict(state, tok=tok, emitted=emitted, active=active)
         return cache, new_state, toks
 
     return chunk
@@ -249,15 +279,17 @@ def make_chunk_prefill(cfg: ModelConfig, page_size: int):
     every slot, offset and chunk length.
 
     (params, cache, state, batch{tokens [1, S]}, slot, pos, clen, first,
-    final, key, temp [1], budget, eos) -> (cache, state, tok0). Non-final
-    chunks return garbage tok0 (logits at a mid-prompt token) which the
-    host never syncs; the slot's `active` stays False until the final
-    chunk, so interleaved decode chunks leave its pages untouched
-    (write-mask) and its row reads as idle."""
+    final, uid, key, temp [1], budget, eos) -> (cache, state, tok0).
+    Non-final chunks return garbage tok0 (logits at a mid-prompt token)
+    which the host never syncs; the slot's `active` stays False until
+    the final chunk, so interleaved decode chunks leave its pages
+    untouched (write-mask) and its row reads as idle. The final chunk's
+    first token samples with the schedule-invariant (uid, 0) key —
+    identical to what one-shot admission would have drawn."""
     step = steps_mod.make_prefill_chunk_step(cfg, page_size)
 
     def chunk(params, cache, state, batch, slot, pos, clen, first, final,
-              key, temp, budget, eos):
+              uid, key, temp, budget, eos):
         W = cache["k_pos"].shape[1]
         j = jnp.arange(W, dtype=jnp.int32)
         # first chunk: forget the slot's previous occupant. A prefix hit
@@ -270,7 +302,9 @@ def make_chunk_prefill(cfg: ModelConfig, page_size: int):
         logits, new_kv, new_row = step(params, batch, pool_kv,
                                        cache["page_tbl"][slot], row,
                                        pos, clen)
-        tok0 = sample_tokens(key, logits, temp)[0]
+        uid1 = jnp.full((1,), uid, jnp.int32)
+        tok0 = sample_tokens_indexed(key, uid1, jnp.zeros((1,), jnp.int32),
+                                     logits, temp)[0]
         new_cache = dict(cache, layers=dict(cache["layers"], **new_kv),
                          cur=cache["cur"].at[slot].set(pos + clen),
                          k_pos=cache["k_pos"].at[slot].set(new_row))
@@ -282,6 +316,7 @@ def make_chunk_prefill(cfg: ModelConfig, page_size: int):
                 jnp.where(final, val, old).astype(state[name].dtype))
 
         arm("tok", tok0)
+        arm("uid", uid)
         arm("emitted", jnp.int32(1))
         arm("active", final & (tok0 != eos) & (budget > 1))
         arm("budget", budget)
@@ -334,10 +369,10 @@ class EngineConfig:
                                 # admission, like the paged/SSM
                                 # fallback). 0 = one-shot admission.
                                 # Chunks are clamped to the padded ring
-                                # width. temperature > 0 sampling draws
-                                # a key per chunk, so it differs from
-                                # the one-shot stream (greedy decode is
-                                # token-identical).
+                                # width. Token-identical to one-shot
+                                # admission at any temperature (keys
+                                # derive from (uid, token index), not
+                                # the dispatch schedule).
     token_budget: int | None = None  # per-iteration token cap for the
                                 # chunked schedule: decode steps x
                                 # decode slots + prefill chunk tokens.
@@ -511,14 +546,19 @@ class ServeEngine:
             prefill_capacity = self.capacity
         state = {
             "tok": jnp.zeros((B,), jnp.int32),
-            "key": jax.random.key(self.ecfg.seed),
+            "key": jax.random.key(self.ecfg.seed),   # base key, never split
+            "uid": jnp.zeros((B,), jnp.int32),
             "emitted": jnp.zeros((B,), jnp.int32),
             "active": jnp.zeros((B,), bool),
             "budget": jnp.zeros((B,), jnp.int32),
             "temp": jnp.zeros((B,), jnp.float32),
             "eos": jnp.full((B,), -1, jnp.int32),
         }
-        self._key = jax.random.key(self.ecfg.seed + 1)
+        # the SAME base key feeds every sampling site (admission paths
+        # pass it explicitly, decode reads state["key"]): token keys are
+        # fold_in(fold_in(base, uid), index), so any schedule draws the
+        # same tokens for the same requests
+        self._base_key = jax.random.key(self.ecfg.seed)
 
         prefill = make_prefill_sample(cfg, prefill_capacity)
         insert = (make_paged_insert(cfg, self.ecfg.page_size) if self.paged
@@ -556,7 +596,8 @@ class ServeEngine:
                 small_csh = csh
             ssh = {name: repl for name in state}
             vsh = {name: repl for name in
-                   ("tok", "emitted", "active", "budget", "temp", "eos")}
+                   ("tok", "uid", "emitted", "active", "budget", "temp",
+                    "eos")}
             self._shardings = (psh, csh, ssh, repl)
             self._small_csh = small_csh
             self.params = jax.device_put(params, psh)
@@ -565,7 +606,7 @@ class ServeEngine:
             self._prefill = jax.jit(
                 self._under_rules(prefill),
                 in_shardings=(psh, {"tokens": repl, "lengths": repl},
-                              repl, repl),
+                              repl, repl, repl),
                 out_shardings=(repl, small_csh))
             if self.paged:
                 self._insert = jax.jit(
@@ -622,7 +663,7 @@ class ServeEngine:
                     self._under_rules(raw),
                     in_shardings=(psh, pool_sh, repl,
                                   {"tokens": repl, "lengths": repl},
-                                  repl, repl),
+                                  repl, repl, repl),
                     out_shardings=(repl, self._small_csh))
             self._prefix_fns[key] = fn
         return fn
@@ -643,7 +684,7 @@ class ServeEngine:
                     self._under_rules(raw),
                     in_shardings=(psh, csh, ssh, {"tokens": repl},
                                   repl, repl, repl, repl, repl, repl,
-                                  repl, repl, repl),
+                                  repl, repl, repl, repl),
                     out_shardings=(csh, ssh, repl), donate_argnums=(1, 2))
             self._chunk_fns[sbucket] = fn
         return fn
@@ -810,7 +851,7 @@ class ServeEngine:
             padded[i, :lens[i]] = r.tokens[pre_len:]
         batch = {"tokens": jnp.asarray(padded),
                  "lengths": jnp.asarray(lens, jnp.int32)}
-        self._key, sub = jax.random.split(self._key)
+        uids = jnp.asarray([r.uid for r in reqs], jnp.int32)
         temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
 
         t0 = time.perf_counter()
@@ -819,9 +860,11 @@ class ServeEngine:
                        "v": self.cache["layers"]["v"]}
             pages = jnp.asarray(plans[0].pages[:n_pre], jnp.int32)
             tok0, small_cache = self._prefix_prefill_at(n_pre, bucket)(
-                self.params, pool_kv, pages, batch, sub, temps)
+                self.params, pool_kv, pages, batch, uids, self._base_key,
+                temps)
         else:
-            tok0, small_cache = self._prefill(self.params, batch, sub, temps)
+            tok0, small_cache = self._prefill(self.params, batch, uids,
+                                              self._base_key, temps)
         tok0 = np.asarray(tok0)                            # [N] ints; syncs
         now = time.perf_counter()
         self.stats.prefill_s += now - t0
@@ -855,6 +898,7 @@ class ServeEngine:
             return True                 # requests completed: progress
         slot_vals = {
             "tok": jnp.asarray(tok0.astype(np.int32)),
+            "uid": uids,
             "emitted": jnp.ones((N,), jnp.int32),
             "active": jnp.asarray(live),
             "budget": jnp.asarray(budgets, jnp.int32),
@@ -1009,10 +1053,9 @@ class ServeEngine:
             # below the chunk size, run a shorter final chunk instead of
             # paying for in-jit steps that only decode dead rows. The
             # host knows each slot's remaining budget exactly (EOS can
-            # only end a row EARLIER, never extend it). Note: a trimmed
-            # chunk advances the on-device RNG stream fewer times, so
-            # temperature>0 sampling after a drain differs from the
-            # untrimmed path; greedy decode is token-identical.
+            # only end a row EARLIER, never extend it). Sampling keys
+            # derive from (uid, token index), so trimming is
+            # token-identical at any temperature.
             need = max(
                 min(run.request.max_new,
                     self.ecfg.max_len - len(run.request.tokens))
@@ -1112,14 +1155,14 @@ class ServeEngine:
             sbucket = self._chunk_bucket(c)
             padded = np.zeros((1, sbucket), np.int32)
             padded[0, :c] = req.tokens[pos:pos + c]
-            self._key, sub = jax.random.split(self._key)
             gen = min(req.max_new, self.ecfg.max_len - len(req.tokens))
             tc = time.perf_counter()
             self.cache, self.state, tok0 = self._chunk_at(sbucket)(
                 self.params, self.cache, self.state,
                 {"tokens": jnp.asarray(padded)},
                 jnp.int32(b), jnp.int32(pos), jnp.int32(c),
-                jnp.asarray(sp.first_chunk), jnp.asarray(final), sub,
+                jnp.asarray(sp.first_chunk), jnp.asarray(final),
+                jnp.int32(req.uid), self._base_key,
                 jnp.full((1,), req.temperature, jnp.float32),
                 jnp.int32(gen), jnp.int32(req.eos_id))
             # dispatch-enqueue time only: chunks are never synced here,

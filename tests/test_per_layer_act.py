@@ -1,0 +1,273 @@
+"""Per-layer approximant assignment, trainable params, and the autotuner.
+
+Three contracts:
+  * differentiability — every registered scheme's f32 block has correct
+    gradients (finite differences), and the ``*_fixed`` straight-through
+    JVPs pair the bit-accurate integer primal with the float-block
+    tangent;
+  * consistency — requantizing the f32 build reproduces the fixed
+    build exactly, and a per-layer assignment with every layer pinned
+    to one scheme serves token-identically to the global ``act_impl``
+    shorthand (they must collapse to the same engine);
+  * search — the greedy autotuner only accepts strictly-cheaper
+    candidates within the loss budget.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.common import act_impl_of, act_layers_of
+from repro.core import approximant as apx
+from repro.core import autotune as at
+from repro.core.activations import (ActivationConfig, LayerEngines,
+                                    _make_tanh_fixed_bound, init_act_params,
+                                    tanh_spec_of)
+from repro.models import model as M
+from repro.serve import EngineConfig, ServeEngine
+
+
+def _spec(scheme):
+    geom = apx.get(scheme).default_geometry
+    return apx.spec_for(scheme, "tanh", depth=geom.get("depth", 32),
+                        degree=geom.get("degree", 3))
+
+
+class TestSchemeGradients:
+    @pytest.mark.parametrize("scheme", sorted(apx.schemes()))
+    def test_param_gradients_match_finite_differences(self, scheme):
+        """d/dparams of the f32 block vs central differences along a
+        random direction — knots/coefficients are genuinely trainable
+        for every registered scheme."""
+        spec = _spec(scheme)
+        params = jnp.asarray(apx.params_for(spec, "tanh"))
+        rng = np.random.RandomState(3)
+        x = jnp.asarray(rng.uniform(-3.5, 3.5, (128,)), jnp.float32)
+
+        def f(p):
+            return jnp.sum(jnp.cos(apx.block(x, p, spec)))
+
+        # small direction: rational's block is nonlinear in its params,
+        # so the O(|v|^2 eps^2) curvature term must stay below tolerance
+        v = jnp.asarray(rng.normal(size=params.shape), jnp.float32) * 0.01
+        g = jax.grad(f)(params)
+        assert np.isfinite(np.asarray(g)).all()
+        assert float(jnp.abs(g).max()) > 0.0
+        eps = 1e-3
+        fd = (float(f(params + eps * v)) - float(f(params - eps * v))) \
+            / (2 * eps)
+        an = float(jnp.vdot(g, v))
+        assert abs(fd - an) <= 2e-2 * max(1.0, abs(an)), (scheme, fd, an)
+
+    @pytest.mark.parametrize("scheme", sorted(apx.schemes()))
+    def test_input_gradients_finite(self, scheme):
+        spec = _spec(scheme)
+        params = jnp.asarray(apx.params_for(spec, "tanh"))
+        x = jnp.linspace(-3.0, 3.0, 64, dtype=jnp.float32)
+        g = jax.grad(lambda v: jnp.sum(apx.block(v, params, spec)))(x)
+        assert np.isfinite(np.asarray(g)).all()
+
+
+class TestFixedDatapath:
+    @pytest.mark.parametrize("scheme", sorted(apx.schemes()))
+    def test_requantize_reproduces_fixed_build(self, scheme):
+        """The trainable-params route (f32 build -> requantize) must be
+        BIT-identical to the direct integer build — otherwise binding
+        frozen f32 params would silently change the fixed datapath."""
+        spec = _spec(scheme)
+        f32 = jnp.asarray(apx.params_for(spec, "tanh"))
+        ref = np.asarray(apx.fixed_params_for(spec, "tanh"))
+        got = np.asarray(apx.requantize(f32, spec))
+        assert got.dtype == ref.dtype
+        np.testing.assert_array_equal(got, ref)
+
+    @pytest.mark.parametrize("scheme", sorted(apx.schemes()))
+    def test_straight_through_jvp(self, scheme):
+        """``<scheme>_fixed`` bound tanh: primal is the integer
+        datapath (bit-exact vs fixed_block), tangent is the float
+        block's — the straight-through estimator quantization-aware
+        training relies on."""
+        impl = "cr_fixed" if scheme == "cr_spline" else f"{scheme}_fixed"
+        geom = apx.get(scheme).default_geometry
+        cfg = ActivationConfig(impl=impl, depth=geom.get("depth", 32),
+                               degree=geom.get("degree", 3))
+        spec = tanh_spec_of(cfg)
+        params = jnp.asarray(apx.params_for(spec, "tanh"))
+        bound = _make_tanh_fixed_bound(cfg, params)
+        x = jnp.linspace(-3.0, 3.0, 64, dtype=jnp.float32)
+
+        from repro.core.fixed_point import dequantize, quantize
+        xq = quantize(x, spec.qformat)
+        want = np.asarray(dequantize(apx.fixed_block(
+            xq, apx.requantize(params, spec), spec), spec.qformat))
+        np.testing.assert_array_equal(np.asarray(bound(x)), want)
+
+        dx = jnp.ones_like(x)
+        _, dy = jax.jvp(bound, (x,), (dx,))
+        ref = lambda v: apx.block(v, params, spec)
+        _, dy_ref = jax.jvp(ref, (x,), (dx,))
+        np.testing.assert_allclose(np.asarray(dy), np.asarray(dy_ref),
+                                   rtol=1e-5, atol=1e-6)
+        assert float(jnp.abs(dy).max()) > 0.0
+
+
+class TestPerLayerAssignment:
+    def test_uniform_pin_collapses_to_plain_engine(self):
+        cfg = registry.get("qwen3-0.6b", smoke=True)
+        pinned = act_layers_of(cfg, ("pwl",) * cfg.n_layers)
+        layer_cfgs = pinned.layer_activation_configs()
+        assert len(set(layer_cfgs)) == 1
+        engines = LayerEngines(layer_cfgs)
+        assert len(engines.distinct) == 1
+        assert len(engines.segments) == 1
+
+    def test_act_layers_and_act_impl_mutually_exclusive(self):
+        cfg = registry.get("qwen3-0.6b", smoke=True)
+        bad = dataclasses.replace(cfg, act_impl="pwl",
+                                  act_layers=("pwl",) * cfg.n_layers)
+        with pytest.raises(ValueError, match="mutually"):
+            bad.layer_activation_configs()
+        with pytest.raises(ValueError):
+            act_layers_of(cfg, ("pwl",))      # wrong length
+
+    def test_pinned_per_layer_serves_identical_to_global_impl(self):
+        """ServeEngine: an act_layers map with every layer pinned to one
+        scheme must emit token-for-token what the global act_impl
+        shorthand emits — same engine, same jaxpr, same tokens."""
+        base = registry.get("qwen3-0.6b", smoke=True)
+        params, _ = M.materialize_params(base, seed=0)
+        rng = np.random.RandomState(9)
+        prompts = [rng.randint(0, base.vocab_size, (n,)).astype(np.int32)
+                   for n in (9, 17, 12)]
+
+        def serve(cfg):
+            eng = ServeEngine(cfg, params, EngineConfig(
+                slots=2, max_prompt_len=32, max_len=40, chunk=4))
+            for p in prompts:
+                eng.submit(p, max_new=6, temperature=0.8)
+            return {c.uid: c.tokens for c in eng.run()}
+
+        by_impl = serve(act_impl_of(base, "pwl"))
+        by_map = serve(act_layers_of(base, ("pwl",) * base.n_layers))
+        assert by_map == by_impl
+
+    def test_mixed_assignment_serves_and_matches_forward(self):
+        """A genuinely mixed per-layer model (different scheme per
+        layer) prefills/decodes through ServeEngine and greedy-matches
+        the lockstep forward reference built from the same engine."""
+        from repro.launch import steps as steps_mod
+        base = registry.get("qwen3-0.6b", smoke=True)
+        cfg = act_layers_of(base, ("cr-d32", "pwl-d16"))
+        params, _ = M.materialize_params(cfg, seed=0)
+        engine = steps_mod.make_engine(cfg)
+        assert isinstance(engine, LayerEngines)
+
+        prompt = np.arange(1, 12, dtype=np.int32)
+        gen = 6
+        eng = ServeEngine(cfg, params, EngineConfig(
+            slots=2, max_prompt_len=32, max_len=40, chunk=3))
+        eng.submit(prompt, max_new=gen)
+        done = eng.run()
+
+        logits, cache = M.prefill_fn(
+            params, {"tokens": jnp.asarray(prompt[None, :])}, cfg, engine,
+            capacity=eng.capacity)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        ref = [int(tok[0])]
+        for _ in range(gen - 1):
+            logits, cache = M.decode_fn(params, {"tokens": tok[:, None]},
+                                        cache, cfg, engine)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            ref.append(int(tok[0]))
+        assert done[0].tokens == ref
+
+    def test_act_params_frozen_by_default(self):
+        """One default train step must leave params['act'] bit-identical
+        (grads are zeroed unless TrainHyper.train_act)."""
+        from repro.launch import steps as steps_mod
+        cfg = registry.get("olmo-1b", smoke=True)
+        params, _ = M.materialize_params(cfg, seed=0)
+        assert "act" in params and params["act"]
+        from repro.optim import adamw
+        opt = adamw.init_state(params)
+        before = {t: np.asarray(a) for t, a in params["act"].items()}
+        step = jax.jit(steps_mod.make_train_step(
+            cfg, steps_mod.TrainHyper(remat="none")))
+        B, S = 2, 16
+        batch = {"tokens": jnp.ones((B, S), jnp.int32),
+                 "labels": jnp.ones((B, S), jnp.int32)}
+        params2, _, _ = step(params, opt, batch, jnp.int32(50))
+        for t, a in params2["act"].items():
+            np.testing.assert_array_equal(np.asarray(a), before[t])
+
+    def test_act_gradients_flow_when_bound(self):
+        """The bound engine differentiates through the knots: the loss
+        gradient w.r.t. params['act'] is nonzero."""
+        from repro.launch import steps as steps_mod
+        cfg = registry.get("olmo-1b", smoke=True)
+        params, _ = M.materialize_params(cfg, seed=0)
+        engine = steps_mod.make_engine(cfg)
+        B, S = 2, 16
+        batch = {"tokens": jnp.ones((B, S), jnp.int32),
+                 "labels": jnp.ones((B, S), jnp.int32)}
+
+        def loss(p):
+            return M.loss_fn(p, batch, cfg, engine, remat="none")[0]
+
+        grads = jax.grad(loss)(params)
+        gnorm = sum(float(jnp.abs(g).sum())
+                    for g in jax.tree.leaves(grads["act"]))
+        assert np.isfinite(gnorm) and gnorm > 0.0
+
+
+class TestGreedyAutotune:
+    def _cand(self, tag, gates):
+        act = ActivationConfig(impl="cr_fixed", depth=int(tag))
+        c = at.Candidate(act=act, gates=gates, max_err=0.0)
+        return c
+
+    def test_accepts_cheapest_within_budget(self):
+        base = self._cand("64", gates=100.0)
+        cands = [self._cand("8", 10.0), self._cand("16", 20.0),
+                 self._cand("32", 50.0)]
+        # layer 0 tolerates anything >= 20 gates; layer 1 only >= 50
+        def eval_fn(layer_cfgs):
+            floors = (20.0, 50.0)
+            loss = 1.0
+            for cfg, floor in zip(layer_cfgs, floors):
+                gates = {8: 10.0, 16: 20.0, 32: 50.0, 64: 100.0}[cfg.depth]
+                if gates < floor:
+                    loss += 1.0
+            return loss
+
+        res = at.greedy_assign(eval_fn, 2, cands, base)
+        assert [c.act.depth for c in res.assignment] == [16, 32]
+        assert res.loss <= res.base_loss
+        assert res.gates < res.base_gates
+        assert res.history            # accepted swaps recorded
+
+    def test_no_candidate_keeps_baseline(self):
+        base = self._cand("64", gates=100.0)
+        cands = [self._cand("8", 10.0)]
+        res = at.greedy_assign(lambda cfgs: 1.0 + sum(
+            1 for c in cfgs if c.depth != 64), 2, cands, base)
+        assert [c.act.depth for c in res.assignment] == [64, 64]
+        assert res.gates == res.base_gates
+
+    def test_candidate_grid_is_scored(self):
+        cands = at.candidate_grid(at.REDUCED_GRID)
+        assert len(cands) == len(at.REDUCED_GRID)
+        for c in cands:
+            assert c.gates > 0 and np.isfinite(c.max_err)
+            assert tanh_spec_of(c.act) is not None
+
+    def test_init_act_params_covers_distinct_tags_only(self):
+        cfgs = (ActivationConfig(impl="cr", depth=32),
+                ActivationConfig(impl="cr", depth=32),
+                ActivationConfig(impl="pwl", depth=16),
+                ActivationConfig(impl="exact"))
+        out = init_act_params(cfgs)
+        assert set(out) == {"cr-d32", "pwl-d16"}

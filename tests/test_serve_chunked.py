@@ -118,6 +118,27 @@ class TestChunkedIdentity:
                 "workload must wrap the sliding-window ring"
         assert token_streams(chunked) == token_streams(base)
 
+    def test_chunked_matches_one_shot_temperature(self):
+        """Sampling keys derive from (uid, token index) — never from the
+        dispatch schedule — so the chunked/one-shot identity extends
+        verbatim to temperature > 0, with drain trimming on or off."""
+        cfg, params = setup("qwen3-0.6b")
+        prompts = make_prompts(cfg, [9, 23, 5, 17], seed=4)
+        gen = 12
+
+        def run(**kw):
+            eng = ServeEngine(cfg, params, EngineConfig(
+                slots=2, chunk=4, page_size=5, max_prompt_len=32,
+                max_len=32 + gen, **kw))
+            for p in prompts:
+                eng.submit(p, max_new=gen, temperature=0.8)
+            return token_streams(eng.run())
+
+        base = run()
+        assert run(chunk_prefill=7) == base
+        assert run(chunk_prefill=7, trim_drain=False) == base
+        assert run(trim_drain=False) == base
+
     def test_cursor_crosses_page_boundaries(self):
         """chunk=7 over page_size=5: every chunk write straddles a page
         boundary and the final chunk is a 2-token remainder."""

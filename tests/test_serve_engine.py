@@ -150,6 +150,23 @@ class TestSamplingAndBackends:
             assert len(c.tokens) == 8
             assert all(0 <= t < cfg.padded_vocab for t in c.tokens)
 
+    def test_temperature_streams_schedule_invariant(self):
+        """Sampling keys are fold_in(fold_in(base, uid), index): a pure
+        function of the request and token position. Serial vs batched
+        admission, trimmed vs untrimmed drain and slot count must all
+        emit identical temperature>0 streams, and re-running the same
+        workload must reproduce them exactly."""
+        cfg, params = setup("qwen3-0.6b")
+        prompts = make_prompts(cfg, [9, 17, 30, 12, 5], seed=6)
+        gen = 10
+        base, _ = serve(cfg, params, prompts, gen, temperature=0.7)
+        streams = {c.uid: c.tokens for c in base}
+        for kw in ({"admission": "serial"}, {"slots": 3}, {"chunk": 7}):
+            done, _ = serve(cfg, params, prompts, gen, temperature=0.7, **kw)
+            assert {c.uid: c.tokens for c in done} == streams, kw
+        again, _ = serve(cfg, params, prompts, gen, temperature=0.7)
+        assert {c.uid: c.tokens for c in again} == streams
+
     def test_cr_fixed_engine_serves_unchanged(self):
         """The Q2.13 fixed-point activation datapath must serve through
         the engine exactly as it does through the lockstep reference —
