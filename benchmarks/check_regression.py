@@ -35,11 +35,40 @@ def _kind(doc: dict) -> str:
         return "autotune"
     if "capacity_sweep" in doc:
         return "serve"
+    if "router_sweep" in doc:
+        # router-only run (serve_bench --only router); the FULL serve
+        # doc also carries router_sweep but matches capacity_sweep above
+        return "router"
     if "pareto" in doc:
         return "dse"
     if "mlp" in doc:
         return "kernel"
     raise SystemExit(f"unrecognized benchmark JSON (keys: {sorted(doc)})")
+
+
+def _router_metrics(rs: dict) -> dict:
+    """Deterministic router-tier metrics: completion/shed counts,
+    sustained rates, and the autoscale trajectory are pure functions of
+    the schedule (offered load is counted in router steps, not seconds).
+    Latency percentiles in the sweep are wall-clock and never gated."""
+    out = {
+        "router.sustained_rate_n1": (rs["sustained_rate_n1"], "higher"),
+        "router.sustained_rate_n4": (rs["sustained_rate_n4"], "higher"),
+        "router.token_identity": (int(rs["token_identity"]), "higher"),
+    }
+    for key, rows in rs["replica_sweep"].items():
+        for r in rows:
+            tag = f"router.{key}.rate{r['rate']}"
+            out[f"{tag}.completed"] = (r["completed"], "higher")
+            # a zero-shed baseline row must STAY zero-shed (exact, per
+            # the zero rule in compare())
+            out[f"{tag}.shed"] = (r["shed"], "lower")
+    auto = rs["autoscale"]
+    out["router.autoscale.completed"] = (auto["completed"], "higher")
+    out["router.autoscale.peak_replicas"] = (auto["peak_replicas"], "lower")
+    out["router.autoscale.final_replicas"] = (auto["final_replicas"],
+                                              "lower")
+    return out
 
 
 def _metrics(doc: dict) -> dict:
@@ -62,6 +91,12 @@ def _metrics(doc: dict) -> dict:
             out["interference.prefill_chunks"] = (
                 doc["interference_sweep"]["chunked"]["prefill_chunks"],
                 "higher")
+        # guarded: baselines predating the multi-replica tier have no
+        # router sweep
+        if "router_sweep" in doc:
+            out.update(_router_metrics(doc["router_sweep"]))
+    elif kind == "router":
+        out = _router_metrics(doc["router_sweep"])
     elif kind == "kernel":
         for r in doc["rows"]:
             key = f"err.{r['kernel']}.{r['scheme']}.{r['lookup']}.{r['shape']}"
@@ -137,6 +172,19 @@ def main(argv=None) -> int:
     with open(args.current) as f:
         current = json.load(f)
     kb, kc = _kind(baseline), _kind(current)
+    if (kb, kc) == ("serve", "router"):
+        if "router_sweep" not in baseline:
+            # serve baseline predates the multi-replica tier: nothing
+            # to gate a router-only run against yet
+            print("[check_regression] serve baseline has no "
+                  "router_sweep — bootstrap run, nothing to gate")
+            return 0
+        # router-smoke CI gates a router-only run against the committed
+        # FULL serve baseline: restrict the baseline to its router
+        # sweep, keeping its overall PASS status as the sanity bit
+        baseline = {"router_sweep": baseline["router_sweep"],
+                    "status": baseline.get("status")}
+        kb = "router"
     if kb != kc:
         print(f"[check_regression] kind mismatch: baseline is {kb}, "
               f"current is {kc}")

@@ -50,6 +50,19 @@ Three measurements on the smoke qwen3 config (CPU; relative numbers):
     the chunked schedule's short-request ITL p99 strictly below the
     one-shot engine's (a long prefill may stall decode by at most one
     chunk, never a whole prompt).
+  * router sweep (`--only router` runs just this) — the same fixed
+    greedy stream offered to the multi-replica tier at rates of
+    1/2/4 requests per router step, fleets of N=1 and N=4 in-process
+    replicas behind a bounded shed-policy queue. Offered load is
+    counted in requests per router STEP (a deterministic clock), so
+    `sustained_rate` — the highest rate a fleet absorbs with ZERO
+    shed — is a pure function of the schedule, never of wall-clock.
+    Wall-clock p50/p99 latency rides along for humans. PASS requires
+    N=4 to sustain a strictly higher rate than N=1, every row to
+    account for all requests (completed + shed == offered), routed
+    greedy output token-identical to a single engine on the same
+    stream, and the autoscale trace (1->3 replicas under load, drain
+    back to 1 when idle) to complete everything it admitted.
 """
 from __future__ import annotations
 
@@ -64,12 +77,23 @@ import numpy as np
 from repro.configs import registry
 from repro.launch import steps as steps_mod
 from repro.models import model as M
-from repro.serve import EngineConfig, ServeEngine
+from repro.serve import (AutoscaleConfig, EngineConfig, InProcessReplica,
+                         Router, RouterConfig, ServeEngine)
 
 GEN = 16
 SLOTS = 4
 PROMPT_LEN = 32
 MAX_PROMPT = 48
+
+# router sweep: small per-replica engines so a fleet of 4 stays cheap.
+# gen 6 at chunk 2 takes ~3 engine steps per request, so one 2-slot
+# replica serves ~0.67 requests per router step: N=1 absorbs rate 1
+# (the bounded queue rides out the backlog) but sheds at 2 and 4,
+# while N=4 (~2.67 req/step) absorbs every swept rate
+ROUTER_GEN = 6
+ROUTER_CHUNK = 2
+ROUTER_SLOTS = 2
+ROUTER_RATES = (1, 2, 4)
 
 
 def _workload(rng, n, fixed_len=None):
@@ -301,14 +325,180 @@ def _interference_sweep(cfg, params, seed):
     return out
 
 
+def _router_engine_factory(cfg, params, seed):
+    def factory(rid):
+        return InProcessReplica(ServeEngine(cfg, params, EngineConfig(
+            slots=ROUTER_SLOTS, max_prompt_len=16,
+            max_len=16 + ROUTER_GEN, chunk=ROUTER_CHUNK, seed=seed,
+            prefix_cache=False)))
+    return factory
+
+
+def _offered_load_run(router, prompts, gen, rate):
+    """Offer `rate` requests per router step until the stream runs dry,
+    then drain. The router step count is the clock — deterministic on
+    any machine — and shed records land in router.completions."""
+    it = iter(prompts)
+    exhausted = False
+    while not exhausted or router.pending:
+        if not exhausted:
+            for _ in range(rate):
+                p = next(it, None)
+                if p is None:
+                    exhausted = True
+                    break
+                router.submit(p, max_new=gen)
+        router.step()
+    return sorted(router.completions, key=lambda c: c.uid)
+
+
+def _router_sweep(cfg, params, seed):
+    """Offered-load sweep through the multi-replica tier (see module
+    docstring). Everything gated downstream is schedule-deterministic:
+    completion/shed counts, sustained rates, the autoscale trajectory.
+    Latency percentiles are wall-clock and informational only."""
+    rng = np.random.RandomState(seed + 41)
+    n_req = 16
+    # fixed length 12 -> one prefill bucket (16): admission batching
+    # never reorders, so the schedule is a pure function of the rate
+    prompts = [rng.randint(0, 512, (12,)).astype(np.int32)
+               for _ in range(n_req)]
+    factory = _router_engine_factory(cfg, params, seed)
+    out = {"offered_requests": n_req, "gen": ROUTER_GEN,
+           "replica_slots": ROUTER_SLOTS, "rates": list(ROUTER_RATES)}
+
+    sweep = {}
+    for n_rep in (1, 4):
+        rows = []
+        for rate in ROUTER_RATES:
+            router = Router(factory, RouterConfig(
+                replicas=n_rep, queue_limit=8, policy="shed",
+                replica_queue=2))
+            done = _offered_load_run(router, prompts, ROUTER_GEN, rate)
+            st = router.stats
+            real = [c for c in done if c.finish_reason != "shed"]
+            lat = (np.asarray(sorted(c.latency_s for c in real))
+                   if real else np.zeros(1))
+            rows.append({
+                "rate": rate,
+                "completed": st.completed,
+                "shed": st.shed,
+                "router_steps": st.steps,
+                "queue_peak": st.queue_peak,
+                "p50_latency_s": float(np.percentile(lat, 50)),
+                "p99_latency_s": float(np.percentile(lat, 99)),
+            })
+        sweep[f"n{n_rep}"] = rows
+    out["replica_sweep"] = sweep
+    for key in ("n1", "n4"):
+        # prefix-monotone: the highest rate such that it AND every
+        # lower rate ran shed-free (a freak zero-shed at a high rate
+        # after shedding at a lower one is not "sustained")
+        sustained = 0
+        for r in sweep[key]:
+            if r["shed"]:
+                break
+            sustained = r["rate"]
+        out[f"sustained_rate_{key}"] = sustained
+
+    # routed greedy output must be token-identical to one engine
+    # serving the same stream (uids match because both assign FIFO)
+    single = ServeEngine(cfg, params, EngineConfig(
+        slots=ROUTER_SLOTS, max_prompt_len=16, max_len=16 + ROUTER_GEN,
+        chunk=ROUTER_CHUNK, seed=seed, prefix_cache=False))
+    for p in prompts:
+        single.submit(p, max_new=ROUTER_GEN)
+    base = {c.uid: c.tokens for c in single.run()}
+    router = Router(factory, RouterConfig(replicas=2, queue_limit=64))
+    for p in prompts:
+        router.submit(p, max_new=ROUTER_GEN)
+    routed = {c.uid: c.tokens for c in router.run()}
+    out["token_identity"] = routed == base
+
+    # autoscale trace: start at 1 replica under rate 2, let the
+    # stats-driven loop grow the fleet, then idle it back down
+    router = Router(factory, RouterConfig(
+        replicas=1, queue_limit=64, replica_queue=2,
+        autoscale=AutoscaleConfig(min_replicas=1, max_replicas=3,
+                                  window=2, up_util=0.5, down_util=0.25,
+                                  cooldown=1)))
+    _offered_load_run(router, prompts, ROUTER_GEN, rate=2)
+    for _ in range(16):                 # idle windows: drain + retire
+        router.step()
+    st = router.stats
+    out["autoscale"] = {
+        "peak_replicas": st.replica_peak,
+        "scale_ups": st.scale_ups,
+        "scale_downs": st.scale_downs,
+        "retired": st.retired,
+        "completed": st.completed,
+        "final_replicas": len(router.live_rids()),
+        "trajectory": st.replica_trajectory,
+    }
+
+    auto = out["autoscale"]
+    out["ok"] = (
+        out["sustained_rate_n4"] > out["sustained_rate_n1"]
+        and all(r["completed"] + r["shed"] == n_req
+                for rows in sweep.values() for r in rows)
+        and out["token_identity"]
+        and auto["completed"] == n_req
+        and auto["scale_ups"] > 0
+        and 1 < auto["peak_replicas"] <= 3
+        and auto["final_replicas"] == 1)
+    return out
+
+
+def _print_router(router_sweep):
+    rs = router_sweep
+    print(f"== router sweep ({rs['offered_requests']} reqs, "
+          f"gen {rs['gen']}, {rs['replica_slots']} slots/replica) ==")
+    for key, rows in rs["replica_sweep"].items():
+        for r in rows:
+            print(f"  {key} rate {r['rate']}: {r['completed']:2d} done, "
+                  f"{r['shed']:2d} shed over {r['router_steps']:3d} steps "
+                  f"(queue peak {r['queue_peak']}); p50 "
+                  f"{r['p50_latency_s']*1e3:6.0f} ms p99 "
+                  f"{r['p99_latency_s']*1e3:6.0f} ms")
+    print(f"  sustained rate: n1={rs['sustained_rate_n1']} "
+          f"n4={rs['sustained_rate_n4']} req/step; token identity "
+          f"{rs['token_identity']}")
+    a = rs["autoscale"]
+    print(f"  autoscale: peak {a['peak_replicas']} replicas "
+          f"(+{a['scale_ups']}/-{a['scale_downs']}, retired "
+          f"{a['retired']}), {a['completed']} completed, trajectory "
+          f"{a['trajectory']}")
+
+
 def run(verbose: bool = True, json_path: str | None = None,
-        arch: str = "qwen3-0.6b", seed: int = 0) -> dict:
+        arch: str = "qwen3-0.6b", seed: int = 0,
+        only: str | None = None) -> dict:
     cfg = registry.get(arch, smoke=True)
     params, _ = M.materialize_params(cfg, seed=seed)
     params = jax.tree.map(
         lambda a: a.astype(jnp.bfloat16)
         if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
     rng = np.random.RandomState(seed)
+
+    if only == "router":
+        # standalone router run (CI router-smoke): no lockstep/admission
+        # machinery, just the multi-replica sweep and its deterministic
+        # gates
+        router_sweep = _router_sweep(cfg, params, seed)
+        result = {
+            "arch": cfg.name,
+            "router_sweep": router_sweep,
+            "status": "PASS" if router_sweep["ok"] else "FAIL",
+        }
+        if verbose:
+            _print_router(router_sweep)
+            print(f"status: {result['status']}")
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(result, f, indent=2)
+        return result
+    elif only is not None:
+        raise ValueError(f"unknown sweep {only!r} (expected 'router')")
 
     # prefix_cache off for the decode/offered-load measurements: they
     # feed fresh random prompts per pass, so chains parked by earlier
@@ -383,6 +573,9 @@ def run(verbose: bool = True, json_path: str | None = None,
                        and interference["chunked"]["itl_p99_s"]
                        < interference["one_shot"]["itl_p99_s"])
 
+    # -- multi-replica router: offered load, backpressure, autoscale -----
+    router_sweep = _router_sweep(cfg, params, seed)
+
     result = {
         "arch": cfg.name,
         "slots": SLOTS,
@@ -396,9 +589,11 @@ def run(verbose: bool = True, json_path: str | None = None,
         "capacity_sweep": capacity,
         "prefix_sweep": prefix,
         "interference_sweep": interference,
+        "router_sweep": router_sweep,
         "status": "PASS" if (speedup > 1.0 and admission_ok
                              and capacity_ok and prefix_ok
-                             and interference_ok) else "FAIL",
+                             and interference_ok
+                             and router_sweep["ok"]) else "FAIL",
     }
     if verbose:
         print(f"== serve_bench ({cfg.name}, {SLOTS} slots, gen {GEN}) ==")
@@ -445,6 +640,7 @@ def run(verbose: bool = True, json_path: str | None = None,
               f"{io['itl_p99_s']*1e3:.0f} ms one-shot "
               f"({interference['itl_p99_ratio']:.1f}x); ttft p50 "
               f"{ic['ttft_p50_s']*1e3:.0f} vs {io['ttft_p50_s']*1e3:.0f} ms")
+        _print_router(router_sweep)
         print(f"status: {result['status']}")
     if json_path:
         with open(json_path, "w") as f:
@@ -458,10 +654,12 @@ def main():
                    help="write JSON (to stdout, or to the given path)")
     p.add_argument("--arch", default="qwen3-0.6b")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--only", choices=("router",), default=None,
+                   help="run a single sweep standalone (CI smoke jobs)")
     args = p.parse_args()
     to_file = args.json if args.json not in (None, "-") else None
     result = run(verbose=args.json != "-", json_path=to_file,
-                 arch=args.arch, seed=args.seed)
+                 arch=args.arch, seed=args.seed, only=args.only)
     if args.json == "-":
         print(json.dumps(result, indent=2))
     if result["status"] != "PASS":

@@ -30,7 +30,8 @@ from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.parallel import partition as part
-from repro.serve import EngineConfig, ServeEngine, sample_tokens
+from repro.serve import (AutoscaleConfig, EngineConfig, InProcessReplica,
+                         Router, RouterConfig, ServeEngine, sample_tokens)
 
 
 @dataclasses.dataclass
@@ -187,6 +188,63 @@ def serve_batch(cfg, params, prompts, gen_tokens: int, *,
                               decode_tokens=st.decode_tokens)
 
 
+def serve_routed(cfg, params, prompts, gen_tokens: int, *,
+                 replicas: int = 2, queue_limit: int = 64,
+                 policy: str = "reject", autoscale=None,
+                 temperature: float = 0.0, seed: int = 0,
+                 slots: int | None = None, chunk: int = 8,
+                 eos_id: int | None = None, mesh=None,
+                 rules: dict | None = None, **engine_kw):
+    """Serve `prompts` through the multi-replica Router: N in-process
+    `ServeEngine` replicas (sharing the SAME param arrays — no copies)
+    behind load-aware dispatch, a bounded router queue, and optionally
+    the stats-driven autoscaler (`autoscale=AutoscaleConfig(...)`).
+
+    Returns (tokens [B, gen], stats, router) — rows the router shed
+    under backpressure stay all-zero (their uids appear in
+    `router.completions` with finish_reason="shed"); `stats` aggregates
+    the surviving fleet's engine counters."""
+    B, S = prompts.shape[0], prompts.shape[1]
+    if cfg.n_codebooks > 1:
+        raise NotImplementedError("routed serving is engine-only; "
+                                  "multi-codebook decode has no engine path")
+    ecfg = EngineConfig(slots=slots or max(1, B // max(replicas, 1)),
+                        max_prompt_len=S, max_len=S + gen_tokens,
+                        chunk=max(1, min(chunk, gen_tokens - 1) or 1),
+                        seed=seed, **engine_kw)
+
+    def factory(rid):
+        return InProcessReplica(
+            ServeEngine(cfg, params, ecfg, mesh=mesh, rules=rules))
+
+    router = Router(factory, RouterConfig(
+        replicas=replicas, queue_limit=queue_limit, policy=policy,
+        autoscale=autoscale))
+    for b in range(B):
+        router.submit(np.asarray(prompts[b]), gen_tokens,
+                      temperature=temperature, eos_id=eos_id)
+    done = router.run()
+    rows = np.zeros((B, gen_tokens), np.int32)
+    for c in done:
+        rows[c.uid, :len(c.tokens)] = c.tokens
+    st = router.engine_totals()
+    stats = ServeStats(st.prefill_s, st.decode_s, B, S, gen_tokens,
+                       decode_steps=st.decode_steps,
+                       decode_tokens=st.decode_tokens)
+    return jnp.asarray(rows), stats, router
+
+
+def _parse_autoscale(spec: str | None):
+    """--autoscale MIN:MAX -> AutoscaleConfig (None passes through)."""
+    if spec is None:
+        return None
+    try:
+        lo, hi = (int(x) for x in spec.split(":"))
+    except ValueError:
+        raise SystemExit(f"--autoscale wants MIN:MAX, got {spec!r}")
+    return AutoscaleConfig(min_replicas=lo, max_replicas=hi)
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", default="qwen3-0.6b")
@@ -228,6 +286,19 @@ def main(argv=None):
                    help="token budget per engine iteration (requires "
                         "--chunk-prefill; default slots*chunk + "
                         "chunk_prefill)")
+    p.add_argument("--replicas", type=int, default=1,
+                   help="> 1: serve through the multi-replica Router "
+                        "(in-process engine replicas, load-aware "
+                        "dispatch; params shared, no copies)")
+    p.add_argument("--router-queue", type=int, default=64,
+                   help="bounded router admission queue (backpressure)")
+    p.add_argument("--router-policy", choices=("reject", "shed"),
+                   default="reject",
+                   help="queue-full policy: reject the newcomer or shed "
+                        "the oldest queued request")
+    p.add_argument("--autoscale", default=None, metavar="MIN:MAX",
+                   help="enable the stats-driven autoscaler with this "
+                        "replica range (implies the router path)")
     p.add_argument("--json", default=None, help="write stats JSON here")
     args = p.parse_args(argv)
 
@@ -266,17 +337,41 @@ def main(argv=None):
                             vocab_size=min(cfg.vocab_size, 4096)),
             args.batch, args.prompt_len)
         prompts = pipe(0)["tokens"]
-        tokens, stats = serve_batch(cfg, params, prompts, args.gen,
-                                    temperature=args.temperature,
-                                    seed=args.seed, backend=args.backend,
-                                    slots=args.slots, chunk=args.chunk,
-                                    eos_id=args.eos_id, mesh=mesh,
-                                    cache=args.cache,
-                                    page_size=args.page_size,
-                                    prefix_cache=not args.no_prefix_cache,
-                                    chunk_prefill=args.chunk_prefill,
-                                    token_budget=args.token_budget)
+        router = None
+        if args.replicas > 1 or args.autoscale:
+            if args.backend != "engine":
+                raise SystemExit("--replicas/--autoscale are engine-only")
+            tokens, stats, router = serve_routed(
+                cfg, params, prompts, args.gen,
+                replicas=args.replicas, queue_limit=args.router_queue,
+                policy=args.router_policy,
+                autoscale=_parse_autoscale(args.autoscale),
+                temperature=args.temperature, seed=args.seed,
+                slots=args.slots, chunk=args.chunk, eos_id=args.eos_id,
+                mesh=mesh, cache=args.cache, page_size=args.page_size,
+                prefix_cache=not args.no_prefix_cache,
+                chunk_prefill=args.chunk_prefill,
+                token_budget=args.token_budget)
+        else:
+            tokens, stats = serve_batch(
+                cfg, params, prompts, args.gen,
+                temperature=args.temperature,
+                seed=args.seed, backend=args.backend,
+                slots=args.slots, chunk=args.chunk,
+                eos_id=args.eos_id, mesh=mesh,
+                cache=args.cache,
+                page_size=args.page_size,
+                prefix_cache=not args.no_prefix_cache,
+                chunk_prefill=args.chunk_prefill,
+                token_budget=args.token_budget)
 
+    if router is not None:
+        rs = router.stats
+        print(f"[serve] router: {rs.completed}/{rs.submitted} completed "
+              f"(shed {rs.shed}, rejected {rs.rejected}) over "
+              f"{len(router.replicas)} replicas "
+              f"(peak {rs.replica_peak}, +{rs.scale_ups}/-{rs.scale_downs} "
+              f"scale actions)")
     print(f"[serve] prefill {stats.prefill_tokens_per_s:,.0f} tok/s "
           f"({stats.prefill_s*1e3:.0f} ms), decode "
           f"{stats.decode_tokens_per_s:,.0f} tok/s "
@@ -284,8 +379,11 @@ def main(argv=None):
           f"{args.batch} seqs)")
     print("[serve] sample output tokens:", np.asarray(tokens)[0, :16].tolist())
     if args.json:
+        doc = dataclasses.asdict(stats)
+        if router is not None:
+            doc["router"] = dataclasses.asdict(router.stats)
         with open(args.json, "w") as f:
-            json.dump(dataclasses.asdict(stats), f, indent=2)
+            json.dump(doc, f, indent=2)
     return stats
 
 

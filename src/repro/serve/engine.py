@@ -438,6 +438,37 @@ class EngineStats:
     pages_peak: int = 0            # paged only: high-water mark of the above
     prefix_hit_tokens: int = 0     # prompt tokens admitted straight from
                                    # cached prefix pages (never prefilled)
+    # live-occupancy gauges: filled by ServeEngine.snapshot() (a
+    # point-in-time copy), NOT maintained on the engine's own cumulative
+    # `stats` object — they describe "now", not "since boot". The
+    # router's dispatch cost and the autoscaler read these.
+    slots_in_use: int = 0          # bound decode slots right now
+    queue_depth: int = 0           # requests waiting in the engine queue
+    pages_free: int = 0            # PagePool.available() (0 = slot cache)
+
+    def delta(self, prev: "EngineStats") -> "EngineStats":
+        """Interval view of the stats: cumulative counters become
+        (self - prev), gauges keep self's current value. Feeding
+        consecutive ServeEngine.snapshot()s through this (or a
+        StatsWindow) gives rates over a window instead of since-boot
+        totals — the derived *_per_s / utilization properties then
+        describe just that window."""
+        out = EngineStats()
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name not in _STAT_GAUGES:
+                v = v - getattr(prev, f.name)
+            setattr(out, f.name, v)
+        return out
+
+    def decode_utilization(self, slots: int) -> float:
+        """Fraction of decode step-slots that emitted a real token
+        (decode_tokens / (decode_steps * slots)). Deterministic — a
+        function of the schedule, not of wall-clock — which is what
+        lets the autoscaler's decisions (and CI's gate on its replica
+        trajectory) be reproducible. 0.0 when no decode steps ran."""
+        denom = self.decode_steps * slots
+        return self.decode_tokens / denom if denom else 0.0
 
     @property
     def prefill_tokens_per_s(self):
@@ -470,6 +501,28 @@ class EngineStats:
     @property
     def decode_tokens_per_s(self):
         return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+
+# gauges describe "now" and are copied (not differenced) by delta()
+_STAT_GAUGES = frozenset({
+    "slots_in_use", "queue_depth", "pages_free",
+    "pages_in_use", "pages_peak",
+})
+
+
+class StatsWindow:
+    """Rolling interval reader over EngineStats snapshots: each tick()
+    returns the delta since the previous tick (first tick: since boot).
+    One per replica is how the autoscaler turns cumulative engine
+    counters into per-window rates."""
+
+    def __init__(self):
+        self._prev = EngineStats()
+
+    def tick(self, snap: EngineStats) -> EngineStats:
+        delta = snap.delta(self._prev)
+        self._prev = snap
+        return delta
 
 
 class ServeEngine:
@@ -704,7 +757,14 @@ class ServeEngine:
     # -- request intake ----------------------------------------------------
 
     def submit(self, prompt_tokens, max_new: int, *, temperature: float = 0.0,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None, uid: Optional[int] = None,
+               arrival_s: Optional[float] = None) -> int:
+        """Queue one request; returns its uid. A router passes `uid`
+        (its own global id — sampling keys fold it in, so placement
+        does not change the stream) and `arrival_s` (when the request
+        entered the router, so Completion.queue_s spans the real wait,
+        router queue included). Uniqueness of a forced uid is the
+        caller's contract; the internal counter skips past it."""
         toks = [int(t) for t in np.asarray(prompt_tokens).reshape(-1)]
         if not toks:
             raise ValueError("empty prompt")
@@ -713,13 +773,30 @@ class ServeEngine:
                              f"{self.ecfg.max_prompt_len}")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
-        uid = self._uid
-        self._uid += 1
+        if uid is None:
+            uid = self._uid
+            self._uid += 1
+        else:
+            uid = int(uid)
+            self._uid = max(self._uid, uid + 1)
+        now = time.perf_counter()
         self.sched.submit(Request(
             uid=uid, tokens=toks, max_new=max_new, temperature=temperature,
             eos_id=-1 if eos_id is None else int(eos_id),
-            submitted_at=time.perf_counter()))
+            submitted_at=now,
+            arrival_s=now if arrival_s is None else float(arrival_s)))
         return uid
+
+    def snapshot(self) -> EngineStats:
+        """Point-in-time copy of the cumulative stats with the
+        live-occupancy gauges filled (slots_in_use / queue_depth /
+        pages_free). Pair consecutive snapshots via EngineStats.delta
+        (or a StatsWindow) for windowed rates."""
+        s = dataclasses.replace(self.stats)
+        s.slots_in_use = len(self.sched.active_slots())
+        s.queue_depth = len(self.sched.queue)
+        s.pages_free = self._pool.available() if self.paged else 0
+        return s
 
     # -- admission ---------------------------------------------------------
 
@@ -981,12 +1058,15 @@ class ServeEngine:
     def _complete(self, req: Request, tokens, reason: str, *,
                   admitted_at: float, token_times=None) -> None:
         tt = list(token_times or ())
-        ttft = (tt[0] - req.submitted_at) if tt else 0.0
+        # ttft as the client sees it: from system entry (router front
+        # door when routed), not from this engine's submit
+        ttft = (tt[0] - (req.arrival_s or req.submitted_at)) if tt else 0.0
         itl = float(np.percentile(np.diff(tt), 99.0)) if len(tt) >= 2 else 0.0
         self.completions.append(Completion(
             uid=req.uid, prompt_len=len(req.tokens), tokens=list(tokens),
             finish_reason=reason, submitted_at=req.submitted_at,
             admitted_at=admitted_at, finished_at=time.perf_counter(),
+            arrival_s=req.arrival_s or req.submitted_at,
             ttft_s=ttft, itl_p99_s=itl))
 
     # -- page lifecycle (paged contract only) ------------------------------

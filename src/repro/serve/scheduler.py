@@ -61,6 +61,11 @@ class Request:
     temperature: float = 0.0
     eos_id: int = -1        # -1: never stops on a token
     submitted_at: float = 0.0
+    arrival_s: float = 0.0  # when the request entered the SYSTEM — the
+                            # router's front door when routed, else the
+                            # engine submit time (engine.submit defaults
+                            # it). submitted_at - arrival_s is the time
+                            # spent queued ABOVE this engine.
 
 
 @dataclasses.dataclass
@@ -68,10 +73,12 @@ class Completion:
     uid: int
     prompt_len: int
     tokens: list            # generated ids (includes the eos if hit)
-    finish_reason: str      # "eos" | "length"
+    finish_reason: str      # "eos" | "length" | "shed" (router dropped
+                            # it under backpressure; tokens is empty)
     submitted_at: float = 0.0
     admitted_at: float = 0.0
     finished_at: float = 0.0
+    arrival_s: float = 0.0  # system entry (Request.arrival_s)
     ttft_s: float = 0.0     # submit -> first token visible on host
     itl_p99_s: float = 0.0  # p99 gap between consecutive harvested
                             # tokens (0.0 with < 2 tokens); measured at
@@ -80,11 +87,31 @@ class Completion:
                             # a decoding slot
 
     @property
+    def _arrival(self) -> float:
+        # completions minted before arrival_s existed (or built by hand
+        # in tests) leave it 0.0: fall back to the engine submit time
+        return self.arrival_s or self.submitted_at
+
+    @property
     def latency_s(self) -> float:
-        return self.finished_at - self.submitted_at
+        return self.finished_at - self._arrival
 
     @property
     def queue_s(self) -> float:
+        """Total wait before compute: arrival -> engine admission.
+        Splits exactly into router_queue_s + engine_queue_s, fixing the
+        blind spot where router wait was only measurable by the
+        caller's own bookkeeping."""
+        return self.admitted_at - self._arrival
+
+    @property
+    def router_queue_s(self) -> float:
+        """Wait above the engine (router queue); 0 when not routed."""
+        return self.submitted_at - self._arrival
+
+    @property
+    def engine_queue_s(self) -> float:
+        """Wait inside the engine (submit -> slot admission)."""
         return self.admitted_at - self.submitted_at
 
 
