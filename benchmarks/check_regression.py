@@ -39,6 +39,10 @@ def _kind(doc: dict) -> str:
         # router-only run (serve_bench --only router); the FULL serve
         # doc also carries router_sweep but matches capacity_sweep above
         return "router"
+    if "codebook_sweep" in doc:
+        # codebook-only run (serve_bench --only codebook); the FULL
+        # serve doc also carries codebook_sweep but matched above
+        return "codebook"
     if "pareto" in doc:
         return "dse"
     if "mlp" in doc:
@@ -71,6 +75,21 @@ def _router_metrics(rs: dict) -> dict:
     return out
 
 
+def _codebook_metrics(cb: dict) -> dict:
+    """Deterministic multi-codebook metrics: token identity and the
+    plane-token counts are pure functions of the fixed greedy workload
+    (engine and lockstep reference must agree exactly). Plane-tok/s is
+    wall-clock and never gated."""
+    return {
+        "codebook.token_identity": (int(cb["token_identity"]), "higher"),
+        "codebook.codebooks": (cb["codebooks"], "higher"),
+        "codebook.engine.decode_tokens": (cb["engine"]["decode_tokens"],
+                                          "higher"),
+        "codebook.reference.decode_tokens": (
+            cb["reference"]["decode_tokens"], "higher"),
+    }
+
+
 def _metrics(doc: dict) -> dict:
     """Flatten a benchmark JSON to {metric_name: (value, direction)};
     direction 'higher'/'lower' says which way is better."""
@@ -95,8 +114,14 @@ def _metrics(doc: dict) -> dict:
         # router sweep
         if "router_sweep" in doc:
             out.update(_router_metrics(doc["router_sweep"]))
+        # guarded: baselines predating engine-only multi-codebook
+        # serving have no codebook sweep
+        if "codebook_sweep" in doc:
+            out.update(_codebook_metrics(doc["codebook_sweep"]))
     elif kind == "router":
         out = _router_metrics(doc["router_sweep"])
+    elif kind == "codebook":
+        out = _codebook_metrics(doc["codebook_sweep"])
     elif kind == "kernel":
         for r in doc["rows"]:
             key = f"err.{r['kernel']}.{r['scheme']}.{r['lookup']}.{r['shape']}"
@@ -185,6 +210,18 @@ def main(argv=None) -> int:
         baseline = {"router_sweep": baseline["router_sweep"],
                     "status": baseline.get("status")}
         kb = "router"
+    if (kb, kc) == ("serve", "codebook"):
+        if "codebook_sweep" not in baseline:
+            # serve baseline predates engine-only multi-codebook
+            # serving: nothing to gate a codebook-only run against yet
+            print("[check_regression] serve baseline has no "
+                  "codebook_sweep — bootstrap run, nothing to gate")
+            return 0
+        # musicgen-smoke CI gates a codebook-only run against the
+        # committed FULL serve baseline, same restriction as router
+        baseline = {"codebook_sweep": baseline["codebook_sweep"],
+                    "status": baseline.get("status")}
+        kb = "codebook"
     if kb != kc:
         print(f"[check_regression] kind mismatch: baseline is {kb}, "
               f"current is {kc}")

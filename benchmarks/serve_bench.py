@@ -63,6 +63,13 @@ Three measurements on the smoke qwen3 config (CPU; relative numbers):
     greedy output token-identical to a single engine on the same
     stream, and the autoscale trace (1->3 replicas under load, drain
     back to 1 when idle) to complete everything it admitted.
+  * codebook sweep (`--only codebook` runs just this) — multi-codebook
+    serving on the musicgen smoke config: the same fixed greedy
+    K-plane workload through serve_batch (the engine, now the only
+    serving path) and through the benchmark-only lockstep reference.
+    PASS requires exact token identity on every [K] plane and matching
+    plane-token accounting (decode_tokens counts K per position on
+    both sides); decode plane-tok/s for both rides along.
 """
 from __future__ import annotations
 
@@ -449,6 +456,67 @@ def _router_sweep(cfg, params, seed):
     return out
 
 
+def _codebook_sweep(seed):
+    """Multi-codebook serving through the one engine (musicgen smoke).
+
+    The same fixed greedy K-plane workload served by the engine
+    (serve_batch — the only serving path) and by the benchmark-only
+    lockstep reference. PASS requires exact token identity on every
+    [K] plane AND matching plane-token accounting; decode tok/s for
+    both rides along (both warmed, so compiles stay out of the timed
+    pass). Runs on its own arch/params, independent of --arch."""
+    from repro.launch.serve import _serve_batch_python, serve_batch
+    cfg = registry.get("musicgen-large", smoke=True)
+    params, _ = M.materialize_params(cfg, seed=seed)
+    params = jax.tree.map(
+        lambda a: a.astype(jnp.bfloat16)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
+    K = cfg.n_codebooks
+    B, plen, gen = 4, 12, 8
+    rng = np.random.RandomState(seed + 23)
+    prompts = jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (B, plen, K)).astype(np.int32))
+
+    eng_kw = dict(slots=B, chunk=4, seed=seed)
+    serve_batch(cfg, params, prompts, gen, **eng_kw)         # warm
+    eng_toks, eng_stats = serve_batch(cfg, params, prompts, gen, **eng_kw)
+    _serve_batch_python(cfg, params, prompts, gen)           # warm
+    ref_toks, ref_stats = _serve_batch_python(cfg, params, prompts, gen)
+
+    eng_arr, ref_arr = np.asarray(eng_toks), np.asarray(ref_toks)
+    identity = bool(np.array_equal(eng_arr, ref_arr)
+                    and eng_arr.shape == (B, gen, K))
+    return {
+        "arch": cfg.name,
+        "codebooks": K,
+        "offered_requests": B,
+        "prompt_len": plen,
+        "gen": gen,
+        "engine": {
+            "decode_tokens_per_s": eng_stats.decode_tokens_per_s,
+            "decode_tokens": eng_stats.decode_tokens,
+        },
+        "reference": {
+            "decode_tokens_per_s": ref_stats.decode_tokens_per_s,
+            "decode_tokens": ref_stats.decode_tokens,
+        },
+        "token_identity": identity,
+        "ok": (identity
+               and eng_stats.decode_tokens == ref_stats.decode_tokens
+               and eng_stats.planes == ref_stats.planes == K),
+    }
+
+
+def _print_codebook(cb):
+    print(f"== codebook sweep ({cb['arch']}, K={cb['codebooks']}, "
+          f"{cb['offered_requests']} reqs, gen {cb['gen']}) ==")
+    print(f"  engine    : {cb['engine']['decode_tokens_per_s']:8.1f} "
+          f"plane tok/s ({cb['engine']['decode_tokens']} tokens)")
+    print(f"  reference : {cb['reference']['decode_tokens_per_s']:8.1f} "
+          f"plane tok/s ({cb['reference']['decode_tokens']} tokens)")
+    print(f"  token identity {cb['token_identity']}")
+
+
 def _print_router(router_sweep):
     rs = router_sweep
     print(f"== router sweep ({rs['offered_requests']} reqs, "
@@ -497,8 +565,26 @@ def run(verbose: bool = True, json_path: str | None = None,
             with open(json_path, "w") as f:
                 json.dump(result, f, indent=2)
         return result
+    if only == "codebook":
+        # standalone multi-codebook run (CI musicgen-smoke): identity-
+        # gated engine-vs-reference pass on its own arch, no qwen
+        # machinery
+        codebook_sweep = _codebook_sweep(seed)
+        result = {
+            "arch": codebook_sweep["arch"],
+            "codebook_sweep": codebook_sweep,
+            "status": "PASS" if codebook_sweep["ok"] else "FAIL",
+        }
+        if verbose:
+            _print_codebook(codebook_sweep)
+            print(f"status: {result['status']}")
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(result, f, indent=2)
+        return result
     elif only is not None:
-        raise ValueError(f"unknown sweep {only!r} (expected 'router')")
+        raise ValueError(f"unknown sweep {only!r} "
+                         "(expected 'router' or 'codebook')")
 
     # prefix_cache off for the decode/offered-load measurements: they
     # feed fresh random prompts per pass, so chains parked by earlier
@@ -576,6 +662,9 @@ def run(verbose: bool = True, json_path: str | None = None,
     # -- multi-replica router: offered load, backpressure, autoscale -----
     router_sweep = _router_sweep(cfg, params, seed)
 
+    # -- multi-codebook identity + throughput (own arch) -----------------
+    codebook_sweep = _codebook_sweep(seed)
+
     result = {
         "arch": cfg.name,
         "slots": SLOTS,
@@ -590,10 +679,12 @@ def run(verbose: bool = True, json_path: str | None = None,
         "prefix_sweep": prefix,
         "interference_sweep": interference,
         "router_sweep": router_sweep,
+        "codebook_sweep": codebook_sweep,
         "status": "PASS" if (speedup > 1.0 and admission_ok
                              and capacity_ok and prefix_ok
                              and interference_ok
-                             and router_sweep["ok"]) else "FAIL",
+                             and router_sweep["ok"]
+                             and codebook_sweep["ok"]) else "FAIL",
     }
     if verbose:
         print(f"== serve_bench ({cfg.name}, {SLOTS} slots, gen {GEN}) ==")
@@ -641,6 +732,7 @@ def run(verbose: bool = True, json_path: str | None = None,
               f"({interference['itl_p99_ratio']:.1f}x); ttft p50 "
               f"{ic['ttft_p50_s']*1e3:.0f} vs {io['ttft_p50_s']*1e3:.0f} ms")
         _print_router(router_sweep)
+        _print_codebook(codebook_sweep)
         print(f"status: {result['status']}")
     if json_path:
         with open(json_path, "w") as f:
@@ -654,7 +746,7 @@ def main():
                    help="write JSON (to stdout, or to the given path)")
     p.add_argument("--arch", default="qwen3-0.6b")
     p.add_argument("--seed", type=int, default=0)
-    p.add_argument("--only", choices=("router",), default=None,
+    p.add_argument("--only", choices=("router", "codebook"), default=None,
                    help="run a single sweep standalone (CI smoke jobs)")
     args = p.parse_args()
     to_file = args.json if args.json not in (None, "-") else None

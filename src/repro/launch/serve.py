@@ -8,10 +8,12 @@ ServeEngine: prompts become engine requests, decode runs as in-jit
 `lax.scan` chunks with on-device sampling, and the returned tokens/stats
 match the old lockstep contract. With `--model-parallel N` the engine's
 whole datapath (batched prefill, slot insert, decode chunks) runs under
-explicit NamedShardings on the mesh. The legacy per-token python loop is
-kept as `backend="python"` — it is the benchmark baseline the scan path
-is measured against, and the only path for multi-codebook (musicgen)
-decode, which is not slot-batched.
+explicit NamedShardings on the mesh. EVERY workload goes through the
+engine — multi-codebook archs (musicgen) decode [.., K] codebook planes
+inside the same schedules. The per-token lockstep loop survives only as
+`_serve_batch_python`, the benchmark-only reference the engine's token
+identity and speedups are measured against (benchmarks/serve_bench.py);
+it is not a serving path.
 """
 from __future__ import annotations
 
@@ -42,7 +44,11 @@ class ServeStats:
     prompt_len: int
     generated: int          # tokens emitted per prompt (incl. prefill sample)
     decode_steps: int       # sequential decode steps actually run
-    decode_tokens: int      # tokens emitted by decode steps
+    decode_tokens: int      # PLANE tokens emitted by decode steps: a
+                            # multi-codebook position counts K (matches
+                            # EngineStats' accounting, so the engine and
+                            # the lockstep reference agree exactly)
+    planes: int = 1         # codebook count K of the served arch
 
     @property
     def prefill_tokens_per_s(self):
@@ -50,7 +56,7 @@ class ServeStats:
         # prefill_s exactly 0.0 — mirror the decode guard, don't divide
         if not self.prefill_s:
             return 0.0
-        return self.n_prompts * self.prompt_len / self.prefill_s
+        return self.n_prompts * self.prompt_len * self.planes / self.prefill_s
 
     @property
     def decode_tokens_per_s(self):
@@ -61,30 +67,35 @@ class ServeStats:
 
 def _mask_after_eos(tokens: np.ndarray, eos_id: int) -> np.ndarray:
     """Right-pad each row with 0 after its first `eos_id` (the eos itself
-    is kept) — the engine's ragged-completion contract."""
-    out = tokens.copy()
-    for b in range(out.shape[0]):
-        hits = np.nonzero(out[b] == eos_id)[0]
-        if hits.size:
-            out[b, hits[0] + 1:] = 0
-    return out
+    is kept) — the engine's ragged-completion contract. One vectorized
+    cumsum-mask expression, no per-row host loop. tokens [B, gen] or
+    [B, gen, K]; K > 1 tests the eos on codebook 0 (the engine's
+    multi-codebook contract) and zeroes whole [K] positions."""
+    head = tokens[..., 0] if tokens.ndim == 3 else tokens        # [B, gen]
+    is_eos = head == eos_id
+    seen = np.cumsum(is_eos, axis=1)
+    keep = (seen == 0) | (is_eos & (seen == 1))   # up to & incl. first eos
+    if tokens.ndim == 3:
+        keep = keep[..., None]
+    return np.where(keep, tokens, 0).astype(tokens.dtype)
 
 
 def _serve_batch_python(cfg, params, prompts, gen_tokens: int, *,
                         temperature: float = 0.0, seed: int = 0,
                         capacity: int | None = None,
                         eos_id: int | None = None):
-    """Lockstep per-token python loop: one jitted decode dispatch + host
-    sync per token. Exactly gen_tokens - 1 decode steps run (the first
-    token is sampled from the prefill logits; no trailing wasted step).
-    With `eos_id`, rows are right-padded with 0 after their first eos —
-    token-identical (greedy) to the engine's early-stop, though the
-    lockstep loop still runs the full gen_tokens steps."""
+    """BENCHMARK-ONLY lockstep reference — not a serving path (serving
+    always goes through ServeEngine, serve_batch below). One jitted
+    decode dispatch + host sync per token; the baseline the engine's
+    token identity and speedups are measured against
+    (benchmarks/serve_bench.py, tests/test_serve_multicodebook.py).
+
+    Exactly gen_tokens - 1 decode steps run (the first token is sampled
+    from the prefill logits; no trailing wasted step). With `eos_id`,
+    rows are right-padded with 0 after their first eos (codebook 0 for
+    K > 1) — token-identical (greedy) to the engine's early-stop, though
+    the lockstep loop still runs the full gen_tokens steps."""
     B, S = prompts.shape[0], prompts.shape[1]
-    if eos_id is not None and cfg.n_codebooks > 1:
-        raise NotImplementedError(
-            "eos early-stop is per-row over a single token stream; "
-            "multi-codebook decode has no such stream")
     capacity = capacity or M.cache_capacity(cfg, S + gen_tokens)
     prefill = jax.jit(steps_mod.make_prefill_step(cfg, capacity=capacity))
     decode = jax.jit(steps_mod.make_serve_step(cfg), donate_argnums=(2,))
@@ -116,14 +127,16 @@ def _serve_batch_python(cfg, params, prompts, gen_tokens: int, *,
     tokens = jnp.stack(out, axis=1)                        # [B, gen(, K)]
     if eos_id is not None:
         tokens = jnp.asarray(_mask_after_eos(np.asarray(tokens), eos_id))
+    K = cfg.n_codebooks
     return tokens, ServeStats(t_prefill, t_decode, B, S, gen_tokens,
                               decode_steps=gen_tokens - 1,
-                              decode_tokens=B * (gen_tokens - 1))
+                              decode_tokens=B * (gen_tokens - 1) * K,
+                              planes=K)
 
 
 def serve_batch(cfg, params, prompts, gen_tokens: int, *,
                 temperature: float = 0.0, seed: int = 0,
-                capacity: int | None = None, backend: str = "engine",
+                capacity: int | None = None,
                 slots: int | None = None, chunk: int = 8,
                 eos_id: int | None = None, mesh=None,
                 rules: dict | None = None, cache: str = "paged",
@@ -131,31 +144,18 @@ def serve_batch(cfg, params, prompts, gen_tokens: int, *,
                 chunk_prefill: int = 0, token_budget: int | None = None):
     """prompts: int32 [B, S(, K)]. Returns (tokens [B, gen(, K)], stats).
 
-    backend "engine": continuous-batching ServeEngine (batched-bucket
+    Always constructs a continuous-batching ServeEngine (batched-bucket
     admission, in-jit scan decode; `mesh` shards its datapath;
-    `chunk_prefill`/`token_budget` select its token-budget schedule).
-    "python": legacy per-token loop — the only path for multi-codebook
-    (musicgen) decode, which is not slot-batched. An explicit `capacity`
+    `chunk_prefill`/`token_budget` select its token-budget schedule) —
+    multi-codebook archs included: their [B, S, K] prompts decode as
+    K-plane streams through the same engine. An explicit `capacity`
     overrides the engine's default S + gen_tokens cache sizing (it must
-    still fit every request; the python path honors it exactly too).
+    still fit every request).
 
-    With `eos_id`, rows that emit it stop early; every returned row is
-    right-padded with 0 to gen_tokens, so completions of ragged lengths
-    still stack into one [B, gen] block."""
+    With `eos_id`, rows that emit it (codebook 0 for K > 1) stop early;
+    every returned row is right-padded with 0 to gen_tokens, so
+    completions of ragged lengths still stack into one block."""
     B, S = prompts.shape[0], prompts.shape[1]
-    if cfg.n_codebooks > 1 or backend == "python":
-        if mesh is not None and mesh.size > 1:
-            # refusing beats the pre-PR-3 failure mode: a mesh that is
-            # accepted and then silently ignored looks exactly like TP
-            # working until someone checks device memory
-            raise NotImplementedError(
-                "sharded serving is engine-only; the python fallback "
-                "(multi-codebook / backend='python') would serve "
-                "unsharded despite the mesh")
-        return _serve_batch_python(cfg, params, prompts, gen_tokens,
-                                   temperature=temperature, seed=seed,
-                                   capacity=capacity, eos_id=eos_id)
-
     max_len = S + gen_tokens
     if capacity is not None:
         # an earlier version silently rerouted any explicit capacity to
@@ -178,14 +178,16 @@ def serve_batch(cfg, params, prompts, gen_tokens: int, *,
         engine.submit(np.asarray(prompts[b]), gen_tokens,
                       temperature=temperature, eos_id=eos_id)
     done = engine.run()
-    rows = np.zeros((B, gen_tokens), np.int32)             # 0-padded ragged
+    K = cfg.n_codebooks
+    shape = (B, gen_tokens, K) if K > 1 else (B, gen_tokens)
+    rows = np.zeros(shape, np.int32)                       # 0-padded ragged
     for c in done:
-        rows[c.uid, :len(c.tokens)] = c.tokens
-    tokens = jnp.asarray(rows)                             # [B, gen]
+        rows[c.uid, :len(c.tokens)] = np.asarray(c.tokens, np.int32)
+    tokens = jnp.asarray(rows)                             # [B, gen(, K)]
     st = engine.stats
     return tokens, ServeStats(st.prefill_s, st.decode_s, B, S, gen_tokens,
                               decode_steps=st.decode_steps,
-                              decode_tokens=st.decode_tokens)
+                              decode_tokens=st.decode_tokens, planes=K)
 
 
 def serve_routed(cfg, params, prompts, gen_tokens: int, *,
@@ -203,11 +205,9 @@ def serve_routed(cfg, params, prompts, gen_tokens: int, *,
     Returns (tokens [B, gen], stats, router) — rows the router shed
     under backpressure stay all-zero (their uids appear in
     `router.completions` with finish_reason="shed"); `stats` aggregates
-    the surviving fleet's engine counters."""
+    the surviving fleet's engine counters. Multi-codebook prompts
+    [B, S, K] route exactly like scalar streams (replicas are engines)."""
     B, S = prompts.shape[0], prompts.shape[1]
-    if cfg.n_codebooks > 1:
-        raise NotImplementedError("routed serving is engine-only; "
-                                  "multi-codebook decode has no engine path")
     ecfg = EngineConfig(slots=slots or max(1, B // max(replicas, 1)),
                         max_prompt_len=S, max_len=S + gen_tokens,
                         chunk=max(1, min(chunk, gen_tokens - 1) or 1),
@@ -224,13 +224,16 @@ def serve_routed(cfg, params, prompts, gen_tokens: int, *,
         router.submit(np.asarray(prompts[b]), gen_tokens,
                       temperature=temperature, eos_id=eos_id)
     done = router.run()
-    rows = np.zeros((B, gen_tokens), np.int32)
+    K = cfg.n_codebooks
+    shape = (B, gen_tokens, K) if K > 1 else (B, gen_tokens)
+    rows = np.zeros(shape, np.int32)
     for c in done:
-        rows[c.uid, :len(c.tokens)] = c.tokens
+        if c.tokens:
+            rows[c.uid, :len(c.tokens)] = np.asarray(c.tokens, np.int32)
     st = router.engine_totals()
     stats = ServeStats(st.prefill_s, st.decode_s, B, S, gen_tokens,
                        decode_steps=st.decode_steps,
-                       decode_tokens=st.decode_tokens)
+                       decode_tokens=st.decode_tokens, planes=K)
     return jnp.asarray(rows), stats, router
 
 
@@ -262,12 +265,10 @@ def main(argv=None):
                         "per nonlinearity)")
     p.add_argument("--model-parallel", type=int, default=1)
     p.add_argument("--seed", type=int, default=0)
-    p.add_argument("--backend", choices=("engine", "python"),
-                   default="engine")
     p.add_argument("--slots", type=int, default=None,
-                   help="decode slots (engine backend; default = batch)")
+                   help="decode slots (default = batch)")
     p.add_argument("--chunk", type=int, default=8,
-                   help="in-jit decode steps per dispatch (engine backend)")
+                   help="in-jit decode steps per dispatch")
     p.add_argument("--eos-id", type=int, default=None,
                    help="stop rows early on this token id")
     p.add_argument("--cache", choices=("paged", "slot"), default="paged",
@@ -323,7 +324,7 @@ def main(argv=None):
     if cfg.act_impl:
         act_tag += f" (act_impl={cfg.act_impl})"
     print(f"[serve] arch={cfg.name} act={act_tag} "
-          f"backend={args.backend} mesh={dict(mesh.shape)}")
+          f"codebooks={cfg.n_codebooks} mesh={dict(mesh.shape)}")
 
     with part.axis_rules(mesh):
         params, _ = M.materialize_params(cfg, seed=args.seed)
@@ -339,8 +340,6 @@ def main(argv=None):
         prompts = pipe(0)["tokens"]
         router = None
         if args.replicas > 1 or args.autoscale:
-            if args.backend != "engine":
-                raise SystemExit("--replicas/--autoscale are engine-only")
             tokens, stats, router = serve_routed(
                 cfg, params, prompts, args.gen,
                 replicas=args.replicas, queue_limit=args.router_queue,
@@ -356,7 +355,7 @@ def main(argv=None):
             tokens, stats = serve_batch(
                 cfg, params, prompts, args.gen,
                 temperature=args.temperature,
-                seed=args.seed, backend=args.backend,
+                seed=args.seed,
                 slots=args.slots, chunk=args.chunk,
                 eos_id=args.eos_id, mesh=mesh,
                 cache=args.cache,

@@ -61,6 +61,15 @@ chunked-prefill and drain-trimmed schedules are therefore
 token-identical at ANY temperature, not just greedy
 (tests/test_serve.py::test_chunked_schedule_token_identical_temp).
 
+Multi-codebook archs (musicgen: ``cfg.n_codebooks = K > 1``) run
+through the SAME engine and schedules: a token is a [K] plane vector
+([S, K] prompts, [B, K] decode state, K-tuple host records), embeddings
+sum the K planes and the K heads emit [B, K, V] logits inside the same
+dispatches — the KV/paged cache is post-embedding, so page tables,
+prefix chains and write masks are reused unchanged. EOS early-stop is
+defined per-row on codebook 0 (disable via eos_id=None); token stats
+count plane tokens (K per position).
+
 With a mesh, every jitted step (prefill, insert, decode) carries
 explicit NamedShardings: parameters and the per-slot cache are resolved
 from their logical axes via `launch/steps.py::serve_shardings` (the same
@@ -93,7 +102,8 @@ def sample_tokens(key, logits, temperature):
     """Per-row sampling: temperature <= 0 -> greedy. logits [B, ..., V],
     temperature [B] f32 (broadcast over inner dims, e.g. codebooks).
     Returns int32 [B, ...]. The single sampling implementation for both
-    the engine and the python-loop backend (launch/serve.py)."""
+    the engine and the lockstep benchmark reference (launch/serve.py's
+    `_serve_batch_python`, off the serving hot path)."""
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     t = temperature.reshape(temperature.shape + (1,) * (greedy.ndim - 1))
     scaled = logits / jnp.maximum(t, 1e-6)[..., None]
@@ -107,7 +117,10 @@ def sample_tokens_indexed(base_key, uid, index, logits, temperature):
     the request identity and the token position, independent of how the
     host batched dispatches. temperature <= 0 -> greedy. logits
     [B, ..., V], uid/index int32 [B], temperature [B] f32. Returns
-    int32 [B, ...]."""
+    int32 [B, ...]. Inner dims (e.g. [B, K, V] codebook planes) draw
+    i.i.d. under the row's single (uid, index) key — still a pure
+    function of request identity and token position, so K > 1 streams
+    stay schedule-invariant too."""
     keys = jax.vmap(
         lambda u, i: jax.random.fold_in(jax.random.fold_in(base_key, u), i)
     )(uid, index)
@@ -228,10 +241,13 @@ def make_prefix_prefill_sample(cfg: ModelConfig, n_pre: int, page_size: int,
 
 
 def make_decode_chunk(cfg: ModelConfig, n_steps: int, paged: bool = False):
-    """Jit-able (params, cache, state) -> (cache, state, toks [T, B]):
+    """Jit-able (params, cache, state) -> (cache, state, toks [T, B(, K)]):
     `n_steps` decode steps fully on device. Rows record their sampled
     token while active and 0 afterwards; `emitted`/`active` advance so
-    the host can replay termination exactly (EOS or budget).
+    the host can replay termination exactly (EOS or budget). With K > 1
+    codebooks each step feeds tokens [B, 1, K] and samples a [B, K]
+    plane vector under the row's single (uid, index) key; EOS tests
+    codebook 0 (the engine's multi-codebook eos contract).
 
     With `paged`, `active` doubles as the step's write mask: inactive
     rows leave their cache bit-identical (writes land on the trash
@@ -241,6 +257,7 @@ def make_decode_chunk(cfg: ModelConfig, n_steps: int, paged: bool = False):
     some slots are still mid-prefill, and those slots' live page tables
     MUST NOT be scribbled by the shared decode scan."""
     engine = steps_mod.make_engine(cfg)
+    K = cfg.n_codebooks
 
     def chunk(params, cache, state):
         budget, temp, eos = state["budget"], state["temp"], state["eos"]
@@ -248,7 +265,7 @@ def make_decode_chunk(cfg: ModelConfig, n_steps: int, paged: bool = False):
 
         def body(carry, _):
             cache, tok, emitted, active = carry
-            batch = {"tokens": tok[:, None]}
+            batch = {"tokens": tok[:, None, :] if K > 1 else tok[:, None]}
             if paged:
                 batch["write_mask"] = active
             logits, cache = M.decode_fn(params, batch, cache, cfg, engine)
@@ -256,9 +273,11 @@ def make_decode_chunk(cfg: ModelConfig, n_steps: int, paged: bool = False):
             # this step's token is request-token index `emitted` — the
             # same key no matter how steps are cut into chunks
             nxt = sample_tokens_indexed(base, uid, emitted, logits, temp)
-            nxt = jnp.where(active, nxt, 0)                # pad idle rows
+            nxt = jnp.where(active[:, None] if K > 1 else active,
+                            nxt, 0)                        # pad idle rows
             emitted = emitted + active.astype(jnp.int32)
-            active = active & (nxt != eos) & (emitted < budget)
+            head = nxt[..., 0] if K > 1 else nxt
+            active = active & (head != eos) & (emitted < budget)
             return (cache, nxt, emitted, active), nxt
 
         carry0 = (cache, state["tok"], state["emitted"], state["active"])
@@ -285,8 +304,11 @@ def make_chunk_prefill(cfg: ModelConfig, page_size: int):
     the final chunk, so interleaved decode chunks leave its pages
     untouched (write-mask) and its row reads as idle. The final chunk's
     first token samples with the schedule-invariant (uid, 0) key —
-    identical to what one-shot admission would have drawn."""
+    identical to what one-shot admission would have drawn. K > 1
+    codebooks feed chunk tokens [1, S, K] and arm a [K] first-token
+    plane vector; the EOS early-stop tests codebook 0."""
     step = steps_mod.make_prefill_chunk_step(cfg, page_size)
+    K = cfg.n_codebooks
 
     def chunk(params, cache, state, batch, slot, pos, clen, first, final,
               uid, key, temp, budget, eos):
@@ -318,7 +340,8 @@ def make_chunk_prefill(cfg: ModelConfig, page_size: int):
         arm("tok", tok0)
         arm("uid", uid)
         arm("emitted", jnp.int32(1))
-        arm("active", final & (tok0 != eos) & (budget > 1))
+        head = tok0[0] if K > 1 else tok0
+        arm("active", final & (head != eos) & (budget > 1))
         arm("budget", budget)
         arm("temp", temp[0])
         arm("eos", eos)
@@ -415,6 +438,11 @@ class EngineConfig:
 
 @dataclasses.dataclass
 class EngineStats:
+    """Cumulative engine counters. TOKEN COUNTERS COUNT PLANE TOKENS:
+    a multi-codebook engine (K > 1) counts K per sequence position —
+    what the embedding actually summed and the K heads actually emitted
+    — so tok/s rates are comparable across K=1 and K>1 workloads (one
+    musicgen position is K plane tokens, not one)."""
     prefill_s: float = 0.0
     prefill_tokens: int = 0        # real prompt tokens prefilled
     prefill_padded_tokens: int = 0  # incl. bucket padding
@@ -461,13 +489,15 @@ class EngineStats:
             setattr(out, f.name, v)
         return out
 
-    def decode_utilization(self, slots: int) -> float:
+    def decode_utilization(self, slots: int, planes: int = 1) -> float:
         """Fraction of decode step-slots that emitted a real token
-        (decode_tokens / (decode_steps * slots)). Deterministic — a
-        function of the schedule, not of wall-clock — which is what
+        (decode_tokens / (decode_steps * slots * planes)). Deterministic
+        — a function of the schedule, not of wall-clock — which is what
         lets the autoscaler's decisions (and CI's gate on its replica
-        trajectory) be reproducible. 0.0 when no decode steps ran."""
-        denom = self.decode_steps * slots
+        trajectory) be reproducible. 0.0 when no decode steps ran.
+        `planes` is the engine's codebook count K: decode_tokens counts
+        plane tokens, so each occupied step-slot contributes K."""
+        denom = self.decode_steps * slots * planes
         return self.decode_tokens / denom if denom else 0.0
 
     @property
@@ -542,12 +572,14 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig = None,
                  *, mesh=None, rules: dict | None = None):
-        if cfg.n_codebooks > 1:
-            raise NotImplementedError(
-                "multi-codebook decode is not slot-batched; use the "
-                "python-loop serve path (launch/serve.py)")
         self.cfg = cfg
         self.ecfg = ecfg or EngineConfig()
+        # K > 1 (multi-codebook, e.g. musicgen): every token is a [K]
+        # plane vector. Prompts are [S, K], host token records are
+        # K-tuples, decode threads [B, K] through the same schedules;
+        # the cache is post-embedding so nothing page- or slot-shaped
+        # changes. EOS is defined on codebook 0 (eos_id=None disables).
+        self.K = cfg.n_codebooks
         self.capacity = M.cache_capacity(cfg, self.ecfg.max_len)
         # SSM/conv state is contaminated by trailing pad tokens, so
         # stateful archs prefill at exact prompt lengths (scheduler.py)
@@ -597,8 +629,9 @@ class ServeEngine:
         else:
             cache = M.init_cache(cfg, B, self.ecfg.max_len, per_slot=True)
             prefill_capacity = self.capacity
+        tok_shape = (B, self.K) if self.K > 1 else (B,)
         state = {
-            "tok": jnp.zeros((B,), jnp.int32),
+            "tok": jnp.zeros(tok_shape, jnp.int32),
             "key": jax.random.key(self.ecfg.seed),   # base key, never split
             "uid": jnp.zeros((B,), jnp.int32),
             "emitted": jnp.zeros((B,), jnp.int32),
@@ -764,8 +797,20 @@ class ServeEngine:
         does not change the stream) and `arrival_s` (when the request
         entered the router, so Completion.queue_s spans the real wait,
         router queue included). Uniqueness of a forced uid is the
-        caller's contract; the internal counter skips past it."""
-        toks = [int(t) for t in np.asarray(prompt_tokens).reshape(-1)]
+        caller's contract; the internal counter skips past it.
+
+        Multi-codebook engines (K > 1) take prompts [S, K] — an array
+        or a list of K-tuples — and record every host-side token as a
+        K-tuple; lengths, buckets and page costs stay positional."""
+        arr = np.asarray(prompt_tokens)
+        if self.K > 1:
+            if arr.ndim != 2 or arr.shape[-1] != self.K:
+                raise ValueError(
+                    f"multi-codebook prompts must be [S, {self.K}], got "
+                    f"shape {arr.shape}")
+            toks = [tuple(int(x) for x in row) for row in arr]
+        else:
+            toks = [int(t) for t in arr.reshape(-1)]
         if not toks:
             raise ValueError("empty prompt")
         if len(toks) > self.ecfg.max_prompt_len:
@@ -811,6 +856,16 @@ class ServeEngine:
         return bucket_len(
             length, min_bucket=min(self.ecfg.min_bucket, self._chunk_tokens),
             max_len=self._chunk_tokens)
+
+    def _head(self, tok) -> int:
+        """Codebook-0 id of one sampled token (scalar, or a [K] plane
+        row) — the plane the multi-codebook EOS contract tests."""
+        return int(tok[0]) if self.K > 1 else int(tok)
+
+    def _as_token(self, tok):
+        """One sampled token as its host-side record: an int, or a
+        K-tuple of plane ids (hashable, so prefix chains key on it)."""
+        return tuple(int(x) for x in tok) if self.K > 1 else int(tok)
 
     def _match_of(self, req: Request) -> list:
         """Cached prefix page chain for a request (possibly empty),
@@ -896,7 +951,7 @@ class ServeEngine:
             self._tbl[b, :len(sp.pages)] = sp.pages
             self._tbl[b, len(sp.pages):] = 0
             self._tbl_dirty = True
-            self.stats.prefix_hit_tokens += sp.n_shared * ps
+            self.stats.prefix_hit_tokens += sp.n_shared * ps * self.K
             self.stats.prefill_requests += 1
             self.sched.bind(b, SlotRun(request=req, tokens=[],
                                        admitted_at=now))
@@ -923,9 +978,10 @@ class ServeEngine:
         pre_len = n_pre * ps
         lens = [len(r.tokens) - pre_len for r in reqs]     # suffix lengths
         bucket = self._bucket_of(lens[0])
-        padded = np.zeros((N, bucket), np.int32)
+        shape = (N, bucket, self.K) if self.K > 1 else (N, bucket)
+        padded = np.zeros(shape, np.int32)
         for i, r in enumerate(reqs):
-            padded[i, :lens[i]] = r.tokens[pre_len:]
+            padded[i, :lens[i]] = np.asarray(r.tokens[pre_len:], np.int32)
         batch = {"tokens": jnp.asarray(padded),
                  "lengths": jnp.asarray(lens, jnp.int32)}
         uids = jnp.asarray([r.uid for r in reqs], jnp.int32)
@@ -942,12 +998,14 @@ class ServeEngine:
         else:
             tok0, small_cache = self._prefill(self.params, batch, uids,
                                               self._base_key, temps)
-        tok0 = np.asarray(tok0)                            # [N] ints; syncs
+        tok0 = np.asarray(tok0)                        # [N(, K)] ints; syncs
         now = time.perf_counter()
         self.stats.prefill_s += now - t0
-        self.stats.prefill_tokens += sum(lens)
-        self.stats.prefix_hit_tokens += N * pre_len
-        self.stats.prefill_padded_tokens += N * bucket
+        # token stats count PLANE tokens (positions x K): what the model
+        # actually embedded/emitted, so K=1 and K>1 rates are comparable
+        self.stats.prefill_tokens += sum(lens) * self.K
+        self.stats.prefix_hit_tokens += N * pre_len * self.K
+        self.stats.prefill_padded_tokens += N * bucket * self.K
         self.stats.prefill_batches += 1
         self.stats.prefill_requests += N
 
@@ -961,10 +1019,10 @@ class ServeEngine:
         # skips the insert entirely
         live = np.ones(N, bool)
         for i, (req, t, budget) in enumerate(zip(reqs, tok0, budgets)):
-            if int(t) == req.eos_id or budget <= 1:
-                reason = "eos" if int(t) == req.eos_id else "length"
-                self._complete(req, [int(t)], reason, admitted_at=now,
-                               token_times=[now])
+            if self._head(t) == req.eos_id or budget <= 1:
+                reason = "eos" if self._head(t) == req.eos_id else "length"
+                self._complete(req, [self._as_token(t)], reason,
+                               admitted_at=now, token_times=[now])
                 live[i] = False
                 if plans:
                     self._release_plan(plans[i])
@@ -1020,8 +1078,8 @@ class ServeEngine:
                                             sp.pages[:n_full])
         for i in np.nonzero(live)[0]:
             self.sched.bind(slots[i], SlotRun(
-                request=reqs[i], tokens=[int(tok0[i])], admitted_at=now,
-                token_times=[now]))
+                request=reqs[i], tokens=[self._as_token(tok0[i])],
+                admitted_at=now, token_times=[now]))
             if self.paged:
                 self._slot_pages[slots[i]] = plans[i]
         return True
@@ -1159,19 +1217,21 @@ class ServeEngine:
         return True
 
     def _harvest(self, active: list, toks, now: float) -> None:
-        """Fold one synced decode chunk's tokens [T, B] into the bound
-        runs; evict + complete rows that hit EOS or their budget. All T
-        tokens become host-visible at the same sync, so they share one
-        timestamp (ITL measures chunk-sync gaps, not per-token gaps)."""
+        """Fold one synced decode chunk's tokens [T, B(, K)] into the
+        bound runs; evict + complete rows that hit EOS or their budget.
+        All T tokens become host-visible at the same sync, so they share
+        one timestamp (ITL measures chunk-sync gaps, not per-token
+        gaps). decode_tokens counts plane tokens: K per position."""
         for b in active:
             run = self.sched.slots[b]
             req = run.request
             budget = min(req.max_new, self.ecfg.max_len - len(req.tokens))
             for t in range(toks.shape[0]):
-                tok = int(toks[t, b])
-                run.tokens.append(tok)
+                raw = toks[t, b]
+                tok = self._head(raw)
+                run.tokens.append(self._as_token(raw))
                 run.token_times.append(now)
-                self.stats.decode_tokens += 1
+                self.stats.decode_tokens += self.K
                 if tok == req.eos_id or len(run.tokens) >= budget:
                     self.sched.evict(b)
                     if self.paged:
@@ -1233,8 +1293,9 @@ class ServeEngine:
             pos = sp.prefill_pos
             final = pos + c == len(req.tokens)
             sbucket = self._chunk_bucket(c)
-            padded = np.zeros((1, sbucket), np.int32)
-            padded[0, :c] = req.tokens[pos:pos + c]
+            shape = (1, sbucket, self.K) if self.K > 1 else (1, sbucket)
+            padded = np.zeros(shape, np.int32)
+            padded[0, :c] = np.asarray(req.tokens[pos:pos + c], np.int32)
             gen = min(req.max_new, self.ecfg.max_len - len(req.tokens))
             tc = time.perf_counter()
             self.cache, self.state, tok0 = self._chunk_at(sbucket)(
@@ -1249,8 +1310,8 @@ class ServeEngine:
             # their compute overlaps the next decode sync (decode_s)
             self.stats.prefill_s += time.perf_counter() - tc
             self.stats.prefill_chunks += 1
-            self.stats.prefill_tokens += c
-            self.stats.prefill_padded_tokens += sbucket
+            self.stats.prefill_tokens += c * self.K
+            self.stats.prefill_padded_tokens += sbucket * self.K
             sp.prefill_pos = pos + c
             sp.first_chunk = False
             if final:
@@ -1267,7 +1328,8 @@ class ServeEngine:
 
         ps = self.ecfg.page_size
         for b, tok0 in finals:
-            t = int(np.asarray(tok0))
+            raw = np.asarray(tok0)
+            t = self._head(raw)
             now = time.perf_counter()
             run = self.sched.slots[b]
             req = run.request
@@ -1276,7 +1338,7 @@ class ServeEngine:
                 n_full = len(req.tokens) // ps
                 self._pool.register(req.tokens[:n_full * ps],
                                     sp.pages[:n_full])
-            run.tokens.append(t)
+            run.tokens.append(self._as_token(raw))
             run.token_times.append(now)
             gen = min(req.max_new, self.ecfg.max_len - len(req.tokens))
             if t == req.eos_id or gen <= 1:

@@ -30,6 +30,8 @@ import dataclasses
 import multiprocessing as mp
 from typing import Protocol
 
+import numpy as np
+
 from .engine import EngineConfig, EngineStats, ServeEngine
 from .scheduler import Completion
 
@@ -47,6 +49,9 @@ class ReplicaLoad:
     pages_free: int = 0         # PagePool.available(); 0 for slot cache
     pages_per_slot: int = 0     # 0: not paged (pages don't bind)
     pending: bool = False
+    planes: int = 1             # codebook count K: the engine's token
+                                # counters count plane tokens, so
+                                # utilization denominators scale by K
 
     @property
     def headroom(self) -> int:
@@ -77,7 +82,8 @@ def _load_of(engine: ServeEngine) -> ReplicaLoad:
         slots=engine.ecfg.slots,
         pages_free=engine._pool.available() if engine.paged else 0,
         pages_per_slot=engine._n_per_slot if engine.paged else 0,
-        pending=engine.sched.pending)
+        pending=engine.sched.pending,
+        planes=engine.K)
 
 
 class InProcessReplica:
@@ -202,7 +208,11 @@ class ProcessReplica:
 
     def submit(self, prompt_tokens, max_new: int, *, temperature: float = 0.0,
                eos_id=None, uid=None, arrival_s=None) -> int:
-        toks = [int(t) for t in list(prompt_tokens)]
+        arr = np.asarray(prompt_tokens)
+        if arr.ndim == 2:       # [S, K] multi-codebook: keep the planes
+            toks = [tuple(int(x) for x in row) for row in arr]
+        else:
+            toks = [int(t) for t in arr.reshape(-1)]
         uid = self._rpc("submit", {
             "tokens": toks, "max_new": int(max_new),
             "temperature": float(temperature), "eos_id": eos_id,

@@ -50,6 +50,8 @@ import dataclasses
 import time
 from typing import Callable, Optional
 
+import numpy as np
+
 from .engine import EngineStats, StatsWindow
 from .replica import Replica, ReplicaLoad
 from .scheduler import Completion
@@ -256,7 +258,12 @@ class Router:
         """Returns the request's uid, or None if it was rejected
         (bounded queue full under policy="reject")."""
         self.stats.submitted += 1
-        item = _Queued(uid=self._uid, tokens=[int(t) for t in prompt_tokens],
+        arr = np.asarray(prompt_tokens)
+        if arr.ndim == 2:       # [S, K] multi-codebook: keep the planes
+            toks = [tuple(int(x) for x in row) for row in arr]
+        else:
+            toks = [int(t) for t in arr.reshape(-1)]
+        item = _Queued(uid=self._uid, tokens=toks,
                        max_new=max_new, temperature=temperature,
                        eos_id=eos_id, arrival_s=time.perf_counter())
         self.queue.append(item)
@@ -370,7 +377,7 @@ class Router:
             loads[rid] = load
             queued += load.queue_depth
             delta = self._windows[rid].tick(rep.stats())
-            utils.append(delta.decode_utilization(load.slots))
+            utils.append(delta.decode_utilization(load.slots, load.planes))
         sig = AutoscaleSignal(
             decode_util=sum(utils) / len(utils) if utils else 0.0,
             queued=queued, live=len(live), draining=len(self._draining))

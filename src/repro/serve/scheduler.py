@@ -56,7 +56,11 @@ def bucket_len(length: int, *, min_bucket: int = 16, max_len: int,
 @dataclasses.dataclass
 class Request:
     uid: int
-    tokens: list            # prompt token ids
+    tokens: list            # prompt token ids; multi-codebook (K > 1)
+                            # prompts hold one K-tuple per position —
+                            # len() / slicing / bucket keys and page
+                            # costs all stay positional, and tuples
+                            # keep prefix-chain keys hashable
     max_new: int
     temperature: float = 0.0
     eos_id: int = -1        # -1: never stops on a token
@@ -72,7 +76,8 @@ class Request:
 class Completion:
     uid: int
     prompt_len: int
-    tokens: list            # generated ids (includes the eos if hit)
+    tokens: list            # generated ids (includes the eos if hit);
+                            # K-tuples per position when K > 1
     finish_reason: str      # "eos" | "length" | "shed" (router dropped
                             # it under backpressure; tokens is empty)
     submitted_at: float = 0.0

@@ -229,9 +229,11 @@ class TestBatchedAdmission:
 class TestServeBatchWrapper:
     def test_eos_ragged_completions_round_trip_padded(self):
         """serve_batch must survive rows stopping early: every returned
-        row is right-padded with 0 to gen_tokens, the engine and python
-        backends agree, and pre-eos prefixes match the eos-free run."""
-        from repro.launch.serve import _mask_after_eos, serve_batch
+        row is right-padded with 0 to gen_tokens, the engine agrees with
+        the lockstep benchmark reference, and pre-eos prefixes match the
+        eos-free run."""
+        from repro.launch.serve import (_mask_after_eos, _serve_batch_python,
+                                        serve_batch)
         cfg, params = setup("qwen3-0.6b")
         rng = np.random.RandomState(9)
         prompts = jnp.asarray(
@@ -243,38 +245,59 @@ class TestServeBatchWrapper:
         eos = next(int(t) for t in base[:, 2:-1].reshape(-1) if t != 0)
         expected = _mask_after_eos(base, eos)
         assert (expected != base).any(), "eos must truncate something"
-        for backend in ("engine", "python"):
-            toks, _ = serve_batch(cfg, params, prompts, gen,
-                                  backend=backend, eos_id=eos)
-            toks = np.asarray(toks)
-            assert toks.shape == (3, gen)
-            np.testing.assert_array_equal(toks, expected, err_msg=backend)
+        toks, _ = serve_batch(cfg, params, prompts, gen, eos_id=eos)
+        toks = np.asarray(toks)
+        assert toks.shape == (3, gen)
+        np.testing.assert_array_equal(toks, expected)
+        ref, _ = _serve_batch_python(cfg, params, prompts, gen, eos_id=eos)
+        np.testing.assert_array_equal(np.asarray(ref), expected)
 
-    def test_python_backend_uses_engine_sampler(self):
-        """The two backends share one sampling implementation: greedy
+    def test_mask_after_eos_matches_scalar_loop(self):
+        """The vectorized cumsum mask reproduces the per-row scan: keep
+        everything up to and including the FIRST eos, zero the rest —
+        repeated eos hits and eos at the edges included."""
+        from repro.launch.serve import _mask_after_eos
+        rows = np.array([
+            [3, 7, 7, 5, 2],     # eos (7) mid-row, repeated
+            [7, 1, 2, 3, 4],     # eos first
+            [1, 2, 3, 4, 7],     # eos last (nothing to zero)
+            [1, 2, 3, 4, 5],     # no eos
+            [7, 7, 7, 7, 7],     # all eos
+        ], np.int32)
+        expected = rows.copy()
+        for b in range(rows.shape[0]):
+            hits = np.nonzero(rows[b] == 7)[0]
+            if hits.size:
+                expected[b, hits[0] + 1:] = 0
+        np.testing.assert_array_equal(_mask_after_eos(rows, 7), expected)
+        # K-plane block: eos tested on codebook 0, whole positions zeroed
+        planes = np.stack([rows, rows + 100], axis=-1)     # [B, gen, 2]
+        masked = _mask_after_eos(planes, 7)
+        np.testing.assert_array_equal(masked[..., 0], expected)
+        np.testing.assert_array_equal(
+            masked[..., 1], np.where(expected != 0, rows + 100, 0))
+
+    def test_engine_matches_lockstep_reference(self):
+        """serve_batch (always the engine now) and the benchmark-only
+        lockstep reference share one sampling implementation: greedy
         streams agree token-for-token on the same workload."""
-        from repro.launch.serve import serve_batch
+        from repro.launch.serve import _serve_batch_python, serve_batch
         cfg, params = setup("qwen3-0.6b")
         rng = np.random.RandomState(3)
         prompts = jnp.asarray(
             rng.randint(0, cfg.vocab_size, (2, 12)).astype(np.int32))
-        te, _ = serve_batch(cfg, params, prompts, 8, backend="engine")
-        tp, _ = serve_batch(cfg, params, prompts, 8, backend="python")
+        te, _ = serve_batch(cfg, params, prompts, 8)
+        tp, _ = _serve_batch_python(cfg, params, prompts, 8)
         np.testing.assert_array_equal(np.asarray(te), np.asarray(tp))
 
-    def test_python_fallback_refuses_nontrivial_mesh(self):
-        """A mesh that would be silently ignored must be rejected — the
-        pre-engine failure mode was --model-parallel doing nothing."""
+    def test_serve_batch_has_no_backend_switch(self):
+        """The python backend is retired from the serving path: serve_batch
+        accepts no backend selector (the lockstep loop survives only as
+        the benchmark reference `_serve_batch_python`)."""
+        import inspect
+
         from repro.launch.serve import serve_batch
-        cfg, params = setup("qwen3-0.6b")
-        prompts = jnp.zeros((2, 8), jnp.int32)
-
-        class FakeMesh:          # only .size is consulted before routing
-            size = 2
-
-        with pytest.raises(NotImplementedError, match="engine-only"):
-            serve_batch(cfg, params, prompts, 4, backend="python",
-                        mesh=FakeMesh())
+        assert "backend" not in inspect.signature(serve_batch).parameters
 
     def test_prefill_stats_guard_zero_division(self):
         from repro.launch.serve import ServeStats

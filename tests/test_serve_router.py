@@ -455,6 +455,31 @@ class TestRoutedTokenIdentity:
                 c.router_queue_s + c.engine_queue_s)
             assert c.latency_s >= c.queue_s >= 0.0
 
+    @pytest.mark.parametrize("n_replicas", [1, 2])
+    def test_routed_multicodebook_matches_single_engine(self, n_replicas):
+        """Multi-codebook requests route through replicas for free: the
+        router is token-plane-agnostic (prompts [S, K] survive its queue
+        as K-tuples) and every replica is just an engine, so routed
+        musicgen output must equal one engine's — at N=1 and N=2."""
+        cfg, params = setup("musicgen-large")
+        K = cfg.n_codebooks
+        rng = np.random.RandomState(5)
+        prompts = [rng.randint(0, cfg.vocab_size, (n, K)).astype(np.int32)
+                   for n in (9, 14, 6, 11)]
+        gen = 5
+        single = ServeEngine(cfg, params, EngineConfig(
+            slots=2, max_prompt_len=32, max_len=40, chunk=4))
+        for p in prompts:
+            single.submit(p, max_new=gen)
+        base = {c.uid: c.tokens for c in single.run()}
+        assert all(len(t) == K for c in base.values() for t in c)
+
+        router = Router(engine_factory(cfg, params),
+                        RouterConfig(replicas=n_replicas, queue_limit=64))
+        for p in prompts:
+            router.submit(p, max_new=gen)
+        assert {c.uid: c.tokens for c in router.run()} == base
+
     def test_routed_sampling_placement_invariant(self):
         """temp>0 streams are keyed by router-global uid + token index,
         so WHICH replica serves a request cannot change its tokens."""

@@ -71,6 +71,27 @@ with part.axis_rules(mesh):
 assert np.array_equal(np.asarray(chunked_tokens), outs[2]), (
     "TP=2 chunked prefill diverged from TP=2 one-shot",
     np.asarray(chunked_tokens).tolist(), outs[2].tolist())
+
+# multi-codebook serving is engine-only now, so TP must cover it too:
+# the K-plane embed/head tensors carry a "codebook" logical axis that
+# stays replicated while vocab/heads shard — still a pure layout change
+mcfg = registry.get("musicgen-large", smoke=True)
+mparams, _ = M.materialize_params(mcfg, seed=0)
+mparams = jax.tree.map(
+    lambda a: a.astype(jnp.bfloat16)
+    if jnp.issubdtype(a.dtype, jnp.floating) else a, mparams)
+mprompts = jnp.asarray(rng.randint(
+    0, mcfg.vocab_size, (2, 10, mcfg.n_codebooks)).astype(np.int32))
+mouts = {}
+for tp in (1, 2):
+    mesh = make_host_mesh(1, tp)
+    with part.axis_rules(mesh):
+        tokens, _ = serve_batch(mcfg, mparams, mprompts, 6, mesh=mesh)
+    mouts[tp] = np.asarray(tokens)
+assert mouts[1].shape == (2, 6, mcfg.n_codebooks), mouts[1].shape
+assert np.array_equal(mouts[2], mouts[1]), (
+    "musicgen TP=2 diverged from TP=1",
+    mouts[2].tolist(), mouts[1].tolist())
 print("TP-IDENTITY-OK")
 """
 
